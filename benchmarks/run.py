@@ -1,0 +1,172 @@
+"""Benchmark harness: one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  table1_gauss_seidel  — paper Table I: TP/LCD/CP on TX2/CLX/ZEN vs. published
+  table2_tx2_detail    — paper Table II: TX2 port pressures
+  analyzer_throughput  — analysis cost per instruction form (tool perf)
+  ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
+  hlo_roofline         — HLO parse + three-term roofline on a compiled step
+  train_step_tiny      — end-to-end tiny train step wall time
+  decode_step_tiny     — end-to-end tiny decode step wall time
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _timeit(fn, repeats=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def table1_gauss_seidel() -> None:
+    from repro.core import (analyze_kernel, cascade_lake, parse_aarch64,
+                            parse_x86, thunderx2, zen)
+    from repro.core.validation import (GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM,
+                                       TABLE1)
+
+    for arch, asm, parse, model in [
+        ("tx2", GS_TX2_ASM, parse_aarch64, thunderx2()),
+        ("csx", GS_CLX_ASM, parse_x86, cascade_lake()),
+        ("zen", GS_ZEN_ASM, parse_x86, zen()),
+    ]:
+        kernel = parse(asm, name="gauss-seidel")
+        us = _timeit(lambda: analyze_kernel(kernel, model, unroll=4))
+        a = analyze_kernel(kernel, model, unroll=4)
+        row = TABLE1[arch]
+        derived = (f"TP={a.tp_per_it:.2f}/{row.tp};LCD={a.lcd_per_it:.2f}/"
+                   f"{row.lcd};CP={a.cp_per_it:.2f}/{row.cp};"
+                   f"match={round(a.tp_per_it, 2) == row.tp and a.lcd_per_it == row.lcd and a.cp_per_it == row.cp}")
+        _row(f"table1_{arch}", us, derived)
+
+
+def table2_tx2_detail() -> None:
+    from repro.core import analyze_kernel, parse_aarch64, thunderx2
+    from repro.core.validation import GS_TX2_ASM
+
+    kernel = parse_aarch64(GS_TX2_ASM)
+    a = analyze_kernel(kernel, thunderx2(), unroll=4)
+    us = _timeit(lambda: a.report())
+    pp = {p: round(v / 4, 2) for p, v in a.tp.port_pressure.items() if v}
+    _row("table2_tx2", us, ";".join(f"{p}={v}" for p, v in sorted(pp.items())))
+
+
+def analyzer_throughput() -> None:
+    from repro.core import analyze_kernel, parse_x86, cascade_lake
+    from repro.core.validation import GS_CLX_ASM
+
+    body = GS_CLX_ASM.replace("# OSACA-END", "") + "# OSACA-END"
+    kernel = parse_x86(body)
+    model = cascade_lake()
+    us = _timeit(lambda: analyze_kernel(kernel, model, unroll=4))
+    _row("analyzer_throughput", us,
+         f"{us / len(kernel):.2f}us_per_instruction;n={len(kernel)}")
+
+
+def ibench_pipeline() -> None:
+    import jax.numpy as jnp
+    from repro.core.bench import populate_entry
+
+    for name, op in [("add", lambda x: x + 1.0),
+                     ("exp", jnp.exp),
+                     ("matmul_chain", lambda x: x @ x * 1e-2)]:
+        t0 = time.perf_counter()
+        result, entry = populate_entry(name, op, shape=(64, 64),
+                                       chain_length=16, n_parallel=2)
+        us = (time.perf_counter() - t0) * 1e6
+        _row(f"ibench_{name}", us,
+             f"lat={result.latency_us:.2f}us;tput={result.inverse_throughput_us:.2f}us;"
+             f"ilp={result.ilp_speedup:.2f}")
+
+
+def hlo_roofline() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.hlo import roofline_from_compiled, hlo_loop_carried
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y.sum()
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+        jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)).compile()
+    us = _timeit(lambda: roofline_from_compiled(compiled, name="bench"))
+    rep = roofline_from_compiled(compiled, name="bench",
+                                 model_flops=2 * 128 ** 3 * 8)
+    _row("hlo_roofline", us,
+         f"dominant={rep.dominant};useful={rep.useful_ratio:.2f};"
+         f"chains={len(hlo_loop_carried(compiled).chains)}")
+
+
+def train_step_tiny() -> None:
+    import jax
+    from repro.configs import RunConfig, get_config, tiny_variant
+    from repro.data import make_batch
+    from repro.train import init_train_state, make_train_step
+
+    cfg = tiny_variant(get_config("tinyllama-1.1b"))
+    run = RunConfig(attention_impl="chunked", attention_chunk=64,
+                    remat="full", zero=False)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, run), donate_argnums=())
+    batch = {k: jax.numpy.asarray(v)
+             for k, v in make_batch(cfg, 4, 128, 0, 0).items()}
+
+    def go():
+        _, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+
+    us = _timeit(go, repeats=3)
+    _row("train_step_tiny", us, f"tok_per_s={4 * 128 / (us / 1e6):,.0f}")
+
+
+def decode_step_tiny() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import RunConfig, get_config, tiny_variant
+    from repro.models import decode_step, init_params, prefill
+
+    cfg = tiny_variant(get_config("tinyllama-1.1b"))
+    run = RunConfig(attention_impl="chunked", attention_chunk=64, remat="none",
+                    zero=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 63), 0, cfg.vocab)
+    _, cache = prefill(params, cfg, run, tokens)
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, run, c, t))
+    tok = tokens[:, -1:]
+
+    def go():
+        logits, _ = step(params, cache, tok)
+        jax.block_until_ready(logits)
+
+    us = _timeit(go, repeats=3)
+    _row("decode_step_tiny", us, f"tok_per_s={4 / (us / 1e6):,.0f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_gauss_seidel()
+    table2_tx2_detail()
+    analyzer_throughput()
+    ibench_pipeline()
+    hlo_roofline()
+    train_step_tiny()
+    decode_step_tiny()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Analyze an assembly file with the OSACA reproduction.
+
+Usage:
+  PYTHONPATH=src python examples/analyze_kernel.py <file.s> --arch tx2 [--unroll 4]
+
+Markers: wrap the loop body in ``# OSACA-BEGIN`` / ``# OSACA-END`` comments,
+use IACA byte markers, or let the tool auto-detect the innermost loop.
+Without a file argument, analyzes the built-in Gauss-Seidel kernels.
+"""
+
+import argparse
+
+from repro.core import (analyze_kernel, cascade_lake, parse_aarch64, parse_x86,
+                        thunderx2, zen)
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM
+
+MODELS = {"tx2": thunderx2, "csx": cascade_lake, "zen": zen}
+BUILTIN = {"tx2": GS_TX2_ASM, "csx": GS_CLX_ASM, "zen": GS_ZEN_ASM}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("file", nargs="?", default=None)
+    ap.add_argument("--arch", default="tx2", choices=sorted(MODELS))
+    ap.add_argument("--unroll", type=int, default=4)
+    args = ap.parse_args()
+
+    model = MODELS[args.arch]()
+    asm = open(args.file).read() if args.file else BUILTIN[args.arch]
+    parse = parse_aarch64 if model.isa == "aarch64" else parse_x86
+    kernel = parse(asm, name=args.file or "gauss-seidel")
+    analysis = analyze_kernel(kernel, model, unroll=args.unroll)
+    print(analysis.report())
+    bracket = analysis.prediction_bracket()
+    print()
+    ghz = model.frequency_ghz
+    for name, cy in bracket.items():
+        print(f"{name:>16}: {cy:7.2f} cy/it = {cy / ghz:7.2f} ns/it @ {ghz} GHz")
+
+
+if __name__ == "__main__":
+    main()

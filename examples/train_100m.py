@@ -1,0 +1,37 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps.
+
+Uses the full mamba2-130m architecture config (the smallest assigned arch,
+130M params) with a reduced sequence length so it runs on this CPU container;
+on a real pod the same driver scales via repro.launch.train --no-tiny with
+the production mesh.  Checkpoints + restarts are exercised on the way.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+
+from repro.configs import RunConfig, get_config
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("mamba2-130m")  # 130M params, attention-free
+    run = RunConfig(attention_impl="chunked", remat="full", zero=False,
+                    learning_rate=6e-4, warmup_steps=50,
+                    total_steps=args.steps)
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.0f}M params, "
+          f"batch {args.global_batch} x seq {args.seq_len}")
+    train_loop(cfg, run, steps=args.steps, global_batch=args.global_batch,
+               seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+               checkpoint_every=100, log_every=10)
+
+
+if __name__ == "__main__":
+    main()

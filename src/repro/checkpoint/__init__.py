@@ -1,0 +1,9 @@
+from repro.checkpoint.ckpt import (
+    AsyncCheckpointer,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["AsyncCheckpointer", "latest_checkpoint", "restore_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ModelConfig,
+    RunConfig,
+    SHAPES,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    tiny_variant,
+)
+
+__all__ = [
+    "ModelConfig", "RunConfig", "SHAPES", "ShapeConfig",
+    "get_config", "list_archs", "tiny_variant",
+]

@@ -1,0 +1,19 @@
+from repro.core.analysis.throughput import ThroughputResult, throughput_analysis
+from repro.core.analysis.dag import DependencyDAG, Node, build_dag
+from repro.core.analysis.critical_path import CriticalPathResult, critical_path
+from repro.core.analysis.lcd import LCDResult, loop_carried_dependencies
+from repro.core.analysis.analyze import Analysis, analyze_kernel
+
+__all__ = [
+    "Analysis",
+    "CriticalPathResult",
+    "DependencyDAG",
+    "LCDResult",
+    "Node",
+    "ThroughputResult",
+    "analyze_kernel",
+    "build_dag",
+    "critical_path",
+    "loop_carried_dependencies",
+    "throughput_analysis",
+]

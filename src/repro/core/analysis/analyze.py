@@ -1,0 +1,92 @@
+"""Combined OSACA analysis: TP + CP + LCD with a Table-II-style report."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.core.analysis.critical_path import CriticalPathResult, critical_path
+from repro.core.analysis.lcd import LCDResult, loop_carried_dependencies
+from repro.core.analysis.throughput import ThroughputResult, throughput_analysis
+from repro.core.isa.instruction import Kernel
+from repro.core.machine.model import MachineModel
+
+
+@dataclass
+class Analysis:
+    kernel: Kernel
+    model: MachineModel
+    unroll: int
+    tp: ThroughputResult
+    cp: CriticalPathResult
+    lcd: LCDResult
+
+    # Per high-level (source) iteration numbers — the paper's Table I units.
+    @property
+    def tp_per_it(self) -> float:
+        return self.tp.per_iteration(self.unroll)
+
+    @property
+    def cp_per_it(self) -> float:
+        return self.cp.per_iteration(self.unroll)
+
+    @property
+    def lcd_per_it(self) -> float:
+        return self.lcd.per_iteration(self.unroll)
+
+    def prediction_bracket(self) -> Dict[str, float]:
+        """[TP, CP] runtime bracket with the LCD as the expected value."""
+        return {
+            "lower_bound_tp": self.tp_per_it,
+            "expected_lcd": self.lcd_per_it,
+            "upper_bound_cp": self.cp_per_it,
+        }
+
+    def report(self) -> str:
+        """Render a condensed Table-II-style report."""
+        shown_ports = [p for p in self.model.ports
+                       if self.tp.port_pressure.get(p, 0.0) > 0.0]
+        head = " ".join(f"{p:>5}" for p in shown_ports)
+        lines: List[str] = []
+        lines.append(f"OSACA analysis  kernel={self.kernel.name}  "
+                     f"arch={self.model.name}  unroll={self.unroll}x")
+        lines.append(f"{head} | {'LCD':>5} {'CP':>5} | {'LN':>4} | assembly")
+        lines.append("-" * (len(head) + 32))
+        for idx, (cost, pressure) in enumerate(self.tp.per_instruction):
+            cells = " ".join(
+                f"{pressure.get(p, 0.0):5.2f}" if pressure.get(p, 0.0) else "     "
+                for p in shown_ports
+            )
+            lat = cost.entry.latency
+            lcd_mark = f"{lat:5.1f}" if idx in self.lcd.on_longest else "     "
+            cp_mark = f"{lat:5.1f}" if idx in self.cp.on_path else "     "
+            ln = cost.form.line_number
+            lines.append(f"{cells} | {lcd_mark} {cp_mark} | {ln:>4} | "
+                         f"{cost.form.raw.strip()}")
+        lines.append("-" * (len(head) + 32))
+        totals = " ".join(f"{self.tp.port_pressure.get(p, 0.0):5.2f}" for p in shown_ports)
+        lines.append(f"{totals} | {self.lcd.longest:5.1f} {self.cp.length:5.1f} | "
+                     f"(per {self.unroll}x-unrolled block)")
+        per_it = " ".join(
+            f"{self.tp.port_pressure.get(p, 0.0) / self.unroll:5.2f}" for p in shown_ports
+        )
+        lines.append(f"{per_it} | {self.lcd_per_it:5.1f} {self.cp_per_it:5.1f} | "
+                     f"per high-level iteration")
+        lines.append("")
+        lines.append(f"TP  (lower bound): {self.tp_per_it:6.2f} cy/it   "
+                     f"bottleneck port {self.tp.bottleneck_port}")
+        lines.append(f"LCD (expected)  : {self.lcd_per_it:6.2f} cy/it   "
+                     f"{len(self.lcd.chains)} cyclic chain(s) found")
+        lines.append(f"CP  (upper bound): {self.cp_per_it:6.2f} cy/it")
+        return "\n".join(lines)
+
+
+def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1) -> Analysis:
+    return Analysis(
+        kernel=kernel,
+        model=model,
+        unroll=unroll,
+        tp=throughput_analysis(kernel, model),
+        cp=critical_path(kernel, model),
+        lcd=loop_carried_dependencies(kernel, model),
+    )

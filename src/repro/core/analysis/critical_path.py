@@ -1,0 +1,40 @@
+"""Critical-path extraction: longest node-weighted path in the dependency DAG
+via weighted topological DP (Manber).  An upper bound on the runtime of one
+instance of the loop body (paper §II-C).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Set, Tuple
+
+from repro.core.analysis.dag import DependencyDAG, Node, build_dag
+from repro.core.isa.instruction import Kernel
+from repro.core.machine.model import MachineModel
+
+
+@dataclass
+class CriticalPathResult:
+    length: float  # cycles per assembly-block iteration
+    path: Tuple[Node, ...]
+    # Set of instruction indices (within the kernel body) on the CP, for
+    # Table-II-style per-line reporting.
+    on_path: Set[int]
+
+    def per_iteration(self, unroll: int) -> float:
+        return self.length / unroll
+
+
+def critical_path(kernel: Kernel, model: MachineModel) -> CriticalPathResult:
+    dag = build_dag(kernel, model, copies=1)
+    if not dag.nodes:
+        return CriticalPathResult(length=0.0, path=(), on_path=set())
+    dist, parent = dag.longest_paths()
+    end = max(range(len(dag.nodes)), key=lambda v: dist[v])
+    path_ids = dag.path_to(end, parent)
+    path = tuple(dag.nodes[v] for v in path_ids)
+    return CriticalPathResult(
+        length=dist[end],
+        path=path,
+        on_path={n.instr_index for n in path if n.kind == "instr"},
+    )

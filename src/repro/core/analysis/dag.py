@@ -1,0 +1,239 @@
+"""Register-dependency DAG construction (paper §II-C rules 1-4).
+
+1. A vertex per instruction form in the marked code.
+2. From each destination register, edges to every later instruction reading it
+   until the register is redefined (or a dependency break, e.g. zero idiom).
+3. Path weights are the source instruction latencies; OSACA's reported CP
+   totals additionally include the terminal vertex latency, so we equivalently
+   treat the DAG as *node-weighted* (longest path = sum of node latencies).
+4. A source memory reference whose address has a register dependency gets an
+   intermediate load vertex carrying the load latency (memory-operand
+   splitting); pure load instructions are themselves the load vertex.
+
+AArch64 writeback forms (``str d5, [x14], 8``) write their base register, so
+they appear as defs like any other — this is how the store→address→load chain
+of the paper's Table II ends up on the critical path.  For the *LCD* analysis
+the writeback is modeled as the separate address-update µ-op it really is
+(depending only on the address registers, not the store data): this matches
+both the hardware behaviour and OSACA's published Table II, whose CP column
+includes the str→ldr segment while its LCD chain carries the pure FP
+dependency (``writeback_chains_data`` selects between the two).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.isa.instruction import Kernel
+from repro.core.machine.model import InstructionCost, MachineModel
+
+
+@dataclass
+class Node:
+    nid: int
+    kind: str  # "instr" | "load"
+    instr_index: int  # index within the *original* kernel body
+    copy: int  # which duplicated copy of the body (0 for plain CP analysis)
+    latency: float
+    cost: Optional[InstructionCost] = None
+
+    @property
+    def line_number(self) -> int:
+        return self.cost.form.line_number if self.cost is not None else -1
+
+
+@dataclass
+class DependencyDAG:
+    nodes: List[Node]
+    succs: List[List[int]]
+    preds: List[List[int]]
+    # instruction node id for (instr_index, copy)
+    instr_node: Dict[Tuple[int, int], int] = field(default_factory=dict)
+
+    def add_node(self, node: Node) -> int:
+        node.nid = len(self.nodes)
+        self.nodes.append(node)
+        self.succs.append([])
+        self.preds.append([])
+        return node.nid
+
+    def add_edge(self, src: int, dst: int) -> None:
+        if src == dst:
+            return
+        if dst not in self.succs[src]:
+            self.succs[src].append(dst)
+            self.preds[dst].append(src)
+
+    def longest_paths(self, sources: Optional[List[int]] = None) -> Tuple[List[float], List[int]]:
+        """Node-weighted longest path DP over the (already topological) ids.
+
+        Returns ``(dist, parent)`` where ``dist[v]`` is the maximum node-
+        latency sum over paths ending at ``v``.  If ``sources`` is given, only
+        paths starting in ``sources`` count (others get ``-inf``).
+        """
+        n = len(self.nodes)
+        neg = float("-inf")
+        dist = [neg] * n
+        parent = [-1] * n
+        allowed_start = set(sources) if sources is not None else None
+        for v in range(n):
+            best_pred = -1
+            best = neg
+            for u in self.preds[v]:
+                if dist[u] > best:
+                    best = dist[u]
+                    best_pred = u
+            if best == neg:
+                if allowed_start is None or v in allowed_start:
+                    dist[v] = self.nodes[v].latency
+            else:
+                dist[v] = best + self.nodes[v].latency
+                parent[v] = best_pred
+            if allowed_start is not None and v in allowed_start and dist[v] < self.nodes[v].latency:
+                dist[v] = self.nodes[v].latency
+                parent[v] = -1
+        return dist, parent
+
+    def path_to(self, v: int, parent: List[int]) -> List[int]:
+        path = []
+        while v != -1:
+            path.append(v)
+            v = parent[v]
+        path.reverse()
+        return path
+
+
+# x86 mnemonic families that write / read the status flags (hidden deps,
+# paper §IV-B "future work"); AArch64 writes flags only via the -s forms.
+_X86_FLAG_WRITERS = ("add", "sub", "inc", "dec", "neg", "and", "or", "xor",
+                     "test", "cmp", "shl", "shr", "sar", "sal", "bt", "adc",
+                     "sbb")
+_X86_FLAG_READERS = ("j", "set", "cmov", "adc", "sbb")
+_A64_FLAG_READERS = ("b.", "bne", "beq", "bgt", "blt", "bge", "ble", "bhi",
+                     "bls", "csel", "csinc", "cset", "ccmp", "adc", "sbc")
+
+
+def _writes_flags(form, isa: str) -> bool:
+    m = form.mnemonic
+    if isa == "x86":
+        return any(m.startswith(p) for p in _X86_FLAG_WRITERS) and not m.startswith("jmp")
+    return m in ("cmp", "cmn", "tst", "ccmp") or m.endswith("s") and m in (
+        "adds", "subs", "ands", "bics")
+
+
+def _reads_flags(form, isa: str) -> bool:
+    m = form.mnemonic
+    if isa == "x86":
+        return any(m.startswith(p) for p in _X86_FLAG_READERS) and m != "jmp"
+    return any(m.startswith(p) for p in _A64_FLAG_READERS)
+
+
+def build_dag(
+    kernel: Kernel,
+    model: MachineModel,
+    copies: int = 1,
+    writeback_chains_data: bool = True,
+    model_flags: bool = False,
+    model_store_forwarding: bool = False,
+) -> DependencyDAG:
+    """Build the dependency DAG over ``copies`` back-to-back body copies.
+
+    ``writeback_chains_data=False`` splits pre-/post-index writeback into its
+    own address-update µ-op node (latency 1, integer ALU) so store data does
+    not chain into later address uses — used by the LCD analysis.
+
+    Beyond-paper extensions (the paper's §IV-B future-work list), both off by
+    default to preserve the published semantics:
+
+    * ``model_flags`` — hidden status-flag dependencies: flag-writers define
+      a pseudo-register ``%flags`` consumed by conditional ops.
+    * ``model_store_forwarding`` — load-after-store: a load whose memory
+      reference is syntactically identical to an earlier store's depends on
+      it (store-forward latency = the store's DB latency).
+    """
+    costs = model.resolve_kernel(kernel)
+    dag = DependencyDAG(nodes=[], succs=[], preds=[])
+    last_def: Dict[str, int] = {}
+    last_store: Dict[tuple, int] = {}  # memory-ref signature -> store node
+
+    def _mem_key(mem, copy_tag=None):
+        return (mem.base.name if mem.base else None,
+                mem.index.name if mem.index else None,
+                mem.scale, mem.offset)
+
+    for copy in range(copies):
+        for idx, cost in enumerate(costs):
+            form = cost.form
+            addr_regs = {
+                r.name
+                for mem in (*form.loads, *form.stores)
+                for r in mem.address_registers
+            }
+            writeback_regs = {
+                mem.base.name
+                for mem in (*form.loads, *form.stores)
+                if (mem.post_index or mem.pre_index) and mem.base is not None
+            }
+            data_sources = [s for s in form.source_registers if s not in addr_regs]
+
+            load_node_id = None
+            if cost.load is not None:
+                # Split-off load µ-op: address regs feed the load vertex.
+                load_node_id = dag.add_node(
+                    Node(nid=-1, kind="load", instr_index=idx, copy=copy,
+                         latency=cost.load.latency, cost=cost)
+                )
+                for r in addr_regs:
+                    if r in last_def:
+                        dag.add_edge(last_def[r], load_node_id)
+
+            nid = dag.add_node(
+                Node(nid=-1, kind="instr", instr_index=idx, copy=copy,
+                     latency=cost.entry.latency, cost=cost)
+            )
+            dag.instr_node[(idx, copy)] = nid
+            if load_node_id is not None:
+                dag.add_edge(load_node_id, nid)
+            else:
+                # Pure loads/stores: address regs feed the instruction itself.
+                for r in addr_regs:
+                    if r in last_def:
+                        dag.add_edge(last_def[r], nid)
+            if not form.is_dep_breaking:
+                for r in data_sources:
+                    if r in last_def:
+                        dag.add_edge(last_def[r], nid)
+
+            if model_flags:
+                if _reads_flags(form, kernel.isa) and "%flags" in last_def:
+                    dag.add_edge(last_def["%flags"], nid)
+                if _writes_flags(form, kernel.isa):
+                    last_def["%flags"] = nid
+
+            if model_store_forwarding:
+                read_node = load_node_id if load_node_id is not None else nid
+                for mem in form.loads:
+                    key = _mem_key(mem)
+                    if key in last_store:
+                        dag.add_edge(last_store[key], read_node)
+                for mem in form.stores:
+                    last_store[_mem_key(mem)] = nid
+
+            wb_node_id = None
+            if writeback_regs and not writeback_chains_data:
+                # Separate address-update µ-op: depends only on address regs.
+                wb_node_id = dag.add_node(
+                    Node(nid=-1, kind="instr", instr_index=idx, copy=copy,
+                         latency=1.0, cost=cost)
+                )
+                for r in addr_regs:
+                    if r in last_def:
+                        dag.add_edge(last_def[r], wb_node_id)
+
+            for r in form.dest_registers:
+                if r in writeback_regs and wb_node_id is not None:
+                    last_def[r] = wb_node_id
+                else:
+                    last_def[r] = nid
+    return dag

@@ -1,0 +1,71 @@
+"""Loop-carried dependency detection (paper §II-D).
+
+Two back-to-back copies of the loop body are analyzed with the same DAG
+construction as the critical path; a dependency chain from an instruction form
+in copy 0 to its own duplicate in copy 1 is a cyclic loop-carried dependency.
+The longest such chain (one period's node-latency sum) bounds the achievable
+overlap of successive iterations from below — the *expected* runtime for
+dependency-bound kernels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Set, Tuple
+
+from repro.core.analysis.dag import DependencyDAG, Node, build_dag
+from repro.core.isa.instruction import Kernel
+from repro.core.machine.model import MachineModel
+
+
+@dataclass
+class LCDChain:
+    length: float  # cycles per assembly-block iteration (one period)
+    instr_indices: Tuple[int, ...]  # chain members (kernel body indices)
+    carried_by: int  # the instruction index whose duplicate closes the cycle
+
+
+@dataclass
+class LCDResult:
+    chains: Tuple[LCDChain, ...]
+    longest: float  # cycles per assembly-block iteration (0 if no LCD)
+    on_longest: Set[int]
+
+    def per_iteration(self, unroll: int) -> float:
+        return self.longest / unroll
+
+
+def loop_carried_dependencies(kernel: Kernel, model: MachineModel) -> LCDResult:
+    # Writeback address updates are independent µ-ops here (see dag.py): a
+    # store's data register must not chain into later address uses, or the
+    # steady-state cycle is overestimated (paper Table II LCD column).
+    dag = build_dag(kernel, model, copies=2, writeback_chains_data=False)
+    n_body = len(kernel)
+    seen: Dict[frozenset, LCDChain] = {}
+
+    for idx in range(n_body):
+        src = dag.instr_node.get((idx, 0))
+        dst = dag.instr_node.get((idx, 1))
+        if src is None or dst is None:
+            continue
+        dist, parent = dag.longest_paths(sources=[src])
+        if dist[dst] == float("-inf"):
+            continue
+        path_ids = dag.path_to(dst, parent)
+        if not path_ids or path_ids[0] != src:
+            continue
+        # One period: exclude the duplicate endpoint's latency.
+        period = dist[dst] - dag.nodes[dst].latency
+        members = tuple(
+            dag.nodes[v].instr_index for v in path_ids[:-1]
+            if dag.nodes[v].kind == "instr"
+        )
+        key = frozenset(members)
+        if key not in seen or seen[key].length < period:
+            seen[key] = LCDChain(length=period, instr_indices=members, carried_by=idx)
+
+    chains = tuple(sorted(seen.values(), key=lambda c: -c.length))
+    if chains:
+        return LCDResult(chains=chains, longest=chains[0].length,
+                         on_longest=set(chains[0].instr_indices))
+    return LCDResult(chains=(), longest=0.0, on_longest=set())

@@ -1,0 +1,45 @@
+"""Block throughput analysis (paper §II-B).
+
+Every instruction's port pressure (after memory-operand splitting and macro
+fusion) is accumulated per port; the block reciprocal throughput is the
+maximum accumulated pressure over all ports.  This assumes perfect
+out-of-order scheduling and no dependencies — a *lower bound* on the runtime
+of one loop iteration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core.isa.instruction import Kernel
+from repro.core.machine.model import InstructionCost, MachineModel
+
+
+@dataclass
+class ThroughputResult:
+    port_pressure: Dict[str, float]  # accumulated cycles per port (per block)
+    per_instruction: Tuple[Tuple[InstructionCost, Dict[str, float]], ...]
+    block_throughput: float  # cycles per assembly-block iteration
+    bottleneck_port: str
+
+    def per_iteration(self, unroll: int) -> float:
+        return self.block_throughput / unroll
+
+
+def throughput_analysis(kernel: Kernel, model: MachineModel) -> ThroughputResult:
+    costs = model.resolve_kernel(kernel)
+    totals: Dict[str, float] = {p: 0.0 for p in model.ports}
+    per_instruction = []
+    for cost in costs:
+        pressure = cost.total_pressure
+        for port, cy in pressure.items():
+            totals[port] = totals.get(port, 0.0) + cy
+        per_instruction.append((cost, pressure))
+    bottleneck = max(totals, key=lambda p: totals[p]) if totals else ""
+    return ThroughputResult(
+        port_pressure=totals,
+        per_instruction=tuple(per_instruction),
+        block_throughput=totals.get(bottleneck, 0.0),
+        bottleneck_port=bottleneck,
+    )

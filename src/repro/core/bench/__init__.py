@@ -1,0 +1,8 @@
+from repro.core.bench.ibench import (
+    BenchmarkResult,
+    measure_latency,
+    measure_throughput,
+    populate_entry,
+)
+
+__all__ = ["BenchmarkResult", "measure_latency", "measure_throughput", "populate_entry"]

@@ -1,0 +1,125 @@
+"""Semi-automatic benchmark pipeline (paper §II-B, the ibench/asmbench role).
+
+The paper populates its instruction database by generating two synthetic
+micro-benchmarks per instruction form:
+
+* **latency**: a serial dependency chain (each op consumes the previous
+  result), so steady-state time/op = latency;
+* **throughput**: independent parallel chains, so steady-state time/op =
+  inverse throughput.
+
+The same methodology is re-targeted here at JAX primitives: we cannot execute
+x86/ARM assembly in this container (those DBs come from public data, exactly
+like the paper's uops.info/Agner-Fog path), but the pipeline itself is fully
+exercised against jnp ops and is what populates the measured per-op cost
+table used to sanity-check the HLO machine model (``repro.core.hlo``).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.machine.model import DBEntry
+
+
+@dataclass
+class BenchmarkResult:
+    name: str
+    latency_us: float  # time per op in the serial-chain benchmark
+    inverse_throughput_us: float  # time per op with independent chains
+    chain_length: int
+    n_parallel: int
+
+    @property
+    def ilp_speedup(self) -> float:
+        if self.inverse_throughput_us == 0:
+            return float("inf")
+        return self.latency_us / self.inverse_throughput_us
+
+
+def _time_fn(fn: Callable, *args, repeats: int = 5) -> float:
+    """Best-of-N wall time of an already-jitted function, in seconds."""
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_latency(
+    op: Callable[[jnp.ndarray], jnp.ndarray],
+    shape: Tuple[int, ...] = (128, 128),
+    dtype=jnp.float32,
+    chain_length: int = 64,
+) -> float:
+    """Serial dependency chain: y = op(op(...op(x)...)). µs per op."""
+
+    def chained(x):
+        def body(carry, _):
+            return op(carry), None
+        y, _ = jax.lax.scan(body, x, None, length=chain_length)
+        return y
+
+    fn = jax.jit(chained)
+    x = jnp.ones(shape, dtype)
+    total = _time_fn(fn, x)
+    return total / chain_length * 1e6
+
+
+def measure_throughput(
+    op: Callable[[jnp.ndarray], jnp.ndarray],
+    shape: Tuple[int, ...] = (128, 128),
+    dtype=jnp.float32,
+    chain_length: int = 64,
+    n_parallel: int = 8,
+) -> float:
+    """``n_parallel`` independent chains (vmapped): exposes ILP. µs per op."""
+
+    def chained(x):
+        def body(carry, _):
+            return op(carry), None
+        y, _ = jax.lax.scan(body, x, None, length=chain_length)
+        return y
+
+    fn = jax.jit(jax.vmap(chained))
+    x = jnp.ones((n_parallel, *shape), dtype)
+    total = _time_fn(fn, x)
+    return total / (chain_length * n_parallel) * 1e6
+
+
+def populate_entry(
+    name: str,
+    op: Callable[[jnp.ndarray], jnp.ndarray],
+    shape: Tuple[int, ...] = (128, 128),
+    dtype=jnp.float32,
+    chain_length: int = 32,
+    n_parallel: int = 4,
+    ports: Tuple[str, ...] = ("VPU",),
+) -> Tuple[BenchmarkResult, DBEntry]:
+    """Run both benchmarks and emit a database entry (µs-denominated).
+
+    This is the ibench import path of the paper: measurement → DB record.
+    """
+    lat = measure_latency(op, shape, dtype, chain_length)
+    tput = measure_throughput(op, shape, dtype, chain_length, n_parallel)
+    result = BenchmarkResult(
+        name=name,
+        latency_us=lat,
+        inverse_throughput_us=tput,
+        chain_length=chain_length,
+        n_parallel=n_parallel,
+    )
+    share = tput / len(ports)
+    entry = DBEntry(
+        latency=lat,
+        pressure={p: share for p in ports},
+        note=f"measured via ibench pipeline ({chain_length}-chain x {n_parallel})",
+    )
+    return result, entry

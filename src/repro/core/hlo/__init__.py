@@ -1,0 +1,12 @@
+from repro.core.hlo.parser import HLOComputation, HLOModule, HLOOp, parse_hlo
+from repro.core.hlo.machine import TPU_V5E, TPUChip
+from repro.core.hlo.roofline import RooflineReport, roofline_from_compiled, roofline_report
+from repro.core.hlo.critical_path import hlo_critical_path
+from repro.core.hlo.lcd import hlo_loop_carried
+
+__all__ = [
+    "HLOComputation", "HLOModule", "HLOOp", "parse_hlo",
+    "TPU_V5E", "TPUChip",
+    "RooflineReport", "roofline_from_compiled", "roofline_report",
+    "hlo_critical_path", "hlo_loop_carried",
+]

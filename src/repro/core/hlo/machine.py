@@ -1,0 +1,81 @@
+"""TPU chip "port model" (DESIGN.md §3).
+
+The OSACA port-model concept carries over with the chip's concurrently
+operating engines as the ports: the MXU (systolic matmul), the VPU
+(vector/elementwise), the HBM interface, and the ICI links.  An HLO op's
+"port pressure" is the time it occupies each engine; the roofline terms are
+exactly the per-port accumulated pressures of the module.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class TPUChip:
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bw: float  # bytes/s per chip
+    ici_bw: float  # bytes/s per link per direction
+    ici_links: int  # ICI links per chip
+    vmem_bytes: int
+    hbm_bytes: int
+
+    # ---- per-op port pressure (seconds) -----------------------------------
+
+    def compute_seconds(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def memory_seconds(self, bytes_accessed: float) -> float:
+        return bytes_accessed / self.hbm_bw
+
+    def collective_seconds(self, bytes_moved: float) -> float:
+        # Task-prescribed roofline denominator: one link's bandwidth.
+        return bytes_moved / self.ici_bw
+
+    def collective_model_seconds(self, opcode: str, operand_bytes: float,
+                                 group_size: int) -> float:
+        """Ring-model refinement: bytes each chip moves over ICI.
+
+        all-reduce     : 2 (n-1)/n x B       (reduce-scatter + all-gather)
+        all-gather     : (n-1) x B           (operand B is the local shard)
+        reduce-scatter : (n-1)/n x B
+        all-to-all     : (n-1)/n x B
+        collective-permute : B
+        """
+        n = max(group_size, 1)
+        base = opcode.replace("-start", "").replace("-done", "")
+        if n == 1:
+            return 0.0
+        mult = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": float(n - 1),
+            "reduce-scatter": (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+            "collective-broadcast": 1.0,
+        }.get(base, 1.0)
+        return mult * operand_bytes / self.ici_bw
+
+    def port_pressure(self, flops: float, bytes_accessed: float,
+                      collective_bytes: float) -> Dict[str, float]:
+        """The module-level three-term pressure (seconds per port)."""
+        return {
+            "MXU": self.compute_seconds(flops),
+            "HBM": self.memory_seconds(bytes_accessed),
+            "ICI": self.collective_seconds(collective_bytes),
+        }
+
+
+# TPU v5e per task spec: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = TPUChip(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    ici_links=4,
+    vmem_bytes=128 * 1024 * 1024,
+    hbm_bytes=16 * 1024**3,
+)

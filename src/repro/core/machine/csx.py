@@ -1,0 +1,76 @@
+"""Intel Cascade Lake X (Skylake-SP port model) machine model.
+
+Eight issue ports P0-P7 plus the divider pipe, per the paper's §II: FP
+add/mul/FMA on P0/P1 (latency 4, tput 0.5/cy each), integer ALU on P0/P1/P5/P6,
+loads on the P2/P3 AGUs (FP-domain load-to-use 6 cy for indexed addressing,
+uops.info), store data on P4 with the store AGU spread over P2/P3/P7.  The
+store node latency is the SKX store-forward latency (6 cy).  cmp/test+Jcc
+macro-fusion is modeled (fused branch issues on P6).
+
+Sources: uops.info SKX tables; Intel SOM; OSACA DB.
+"""
+
+from __future__ import annotations
+
+from repro.core.machine.model import DBEntry, MachineModel, uniform
+
+_FP2 = {"P0": 0.5, "P1": 0.5}
+_ALU4 = uniform(("P0", "P1", "P5", "P6"))
+_LD = {"P2": 0.5, "P3": 0.5}
+_ST = {"P4": 1.0, "P2": 1.0 / 3, "P3": 1.0 / 3, "P7": 1.0 / 3}
+
+_DB = {
+    # AVX scalar FP: latency 4 on SKX/CLX for add/mul/FMA.
+    "vaddsd:fff": DBEntry(latency=4.0, pressure=_FP2),
+    "vsubsd:fff": DBEntry(latency=4.0, pressure=_FP2),
+    "vmulsd:fff": DBEntry(latency=4.0, pressure=_FP2),
+    "addsd:ff": DBEntry(latency=4.0, pressure=_FP2),
+    "mulsd:ff": DBEntry(latency=4.0, pressure=_FP2),
+    "vfmadd231sd:fff": DBEntry(latency=4.0, pressure=_FP2),
+    "vfmadd213sd:fff": DBEntry(latency=4.0, pressure=_FP2),
+    "vfmadd132sd:fff": DBEntry(latency=4.0, pressure=_FP2),
+    "vdivsd:fff": DBEntry(latency=14.0, pressure={"P0": 1.0, "DIV": 4.0}),
+    # Moves/loads/stores.  Load-to-use 6 cy (FP domain, indexed addressing);
+    # store node latency = store-forward latency 6 cy.
+    "movsd:mf": DBEntry(latency=6.0, pressure=_LD),
+    "vmovsd:mf": DBEntry(latency=6.0, pressure=_LD),
+    "movsd:fm": DBEntry(latency=6.0, pressure=_ST),
+    "vmovsd:fm": DBEntry(latency=6.0, pressure=_ST),
+    "movq:mr": DBEntry(latency=5.0, pressure=_LD),
+    "movq:rm": DBEntry(latency=6.0, pressure=_ST),
+    "movsd:ff": DBEntry(latency=1.0, pressure=_FP2),
+    "vmovsd:ff": DBEntry(latency=1.0, pressure=_FP2),
+    "movq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "movl:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "movq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "movl:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    # Integer ALU.
+    "addq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "addq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "subq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "incq:r": DBEntry(latency=1.0, pressure=_ALU4),
+    "leaq:mr": DBEntry(latency=1.0, pressure={"P1": 0.5, "P5": 0.5}),
+    "cmpq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "cmpq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "testq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    # Branches (unfused; the fused path is modeled via macro_fusion).
+    "jne": DBEntry(latency=1.0, pressure={"P6": 1.0}),
+    "je": DBEntry(latency=1.0, pressure={"P6": 1.0}),
+    "jb": DBEntry(latency=1.0, pressure={"P6": 1.0}),
+    "jmp": DBEntry(latency=1.0, pressure={"P6": 1.0}),
+    "nop": DBEntry(latency=0.0, pressure={}),
+}
+
+
+def cascade_lake() -> MachineModel:
+    return MachineModel(
+        name="csx",
+        isa="x86",
+        ports=("P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "DIV"),
+        db=dict(_DB),
+        load_entry=DBEntry(latency=6.0, pressure=_LD, note="split load µ-op"),
+        store_entry=DBEntry(latency=6.0, pressure=_ST, note="split store µ-op"),
+        macro_fusion=True,
+        fused_branch_pressure={"P6": 1.0},
+        frequency_ghz=2.5,
+    )

@@ -1,0 +1,151 @@
+"""Declarative out-of-order port model (paper §II).
+
+A :class:`MachineModel` is a set of named issue ports plus an instruction
+database mapping instruction forms to ``(latency, port pressure)``.  Port
+pressure follows the paper's fixed-probability rule: an instruction form that
+may execute on *n* equivalent ports with inverse throughput *t* contributes
+``t/n`` cycles to each of them (helper :func:`uniform`); forms with known
+µ-op→port mappings carry explicit per-port cycles instead.
+
+Memory-operand splitting (paper §II): an arithmetic instruction with a memory
+source/destination is decomposed into its arithmetic part plus the machine's
+generic load/store part; pressures add, and the load becomes a separate DAG
+vertex carrying the load latency (§II-C rule 4).
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.core.isa.instruction import InstructionForm
+
+
+def uniform(ports: Tuple[str, ...], inverse_throughput: float = 1.0) -> Dict[str, float]:
+    """Fixed-probability pressure: spread ``inverse_throughput`` cycles evenly."""
+    share = inverse_throughput / len(ports)
+    return {p: share for p in ports}
+
+
+@dataclass(frozen=True)
+class DBEntry:
+    """Instruction-database record for one instruction form."""
+
+    latency: float
+    pressure: Mapping[str, float]
+    # Inverse throughput in cycles (informational; the pressure already
+    # encodes it).  Defaults to the pressure sum.
+    throughput: Optional[float] = None
+    note: str = ""
+
+    @property
+    def inverse_throughput(self) -> float:
+        if self.throughput is not None:
+            return self.throughput
+        return max(self.pressure.values()) if self.pressure else 0.0
+
+    def combined_with(self, other: "DBEntry", note: str = "") -> "DBEntry":
+        pressure = dict(self.pressure)
+        for port, cy in other.pressure.items():
+            pressure[port] = pressure.get(port, 0.0) + cy
+        return DBEntry(latency=self.latency, pressure=pressure, note=note)
+
+
+@dataclass
+class InstructionCost:
+    """Resolved cost of one parsed instruction, after memory splitting."""
+
+    form: InstructionForm
+    entry: DBEntry  # arithmetic/primary part (node latency for CP/LCD)
+    load: Optional[DBEntry] = None  # split-off load part, if any
+    store: Optional[DBEntry] = None  # split-off store part, if any
+    fused_away: bool = False  # macro-fused compare: contributes no pressure
+
+    @property
+    def total_pressure(self) -> Dict[str, float]:
+        if self.fused_away:
+            return {}
+        pressure: Dict[str, float] = dict(self.entry.pressure)
+        for part in (self.load, self.store):
+            if part is not None:
+                for port, cy in part.pressure.items():
+                    pressure[port] = pressure.get(port, 0.0) + cy
+        return pressure
+
+
+@dataclass
+class MachineModel:
+    name: str
+    isa: str  # "x86" | "aarch64"
+    ports: Tuple[str, ...]
+    db: Dict[str, DBEntry]
+    # Generic split parts for memory operands embedded in arithmetic forms.
+    load_entry: DBEntry = None  # type: ignore[assignment]
+    store_entry: DBEntry = None  # type: ignore[assignment]
+    # cmp/test + conditional-jump macro fusion (Intel/AMD x86 cores).
+    macro_fusion: bool = False
+    fused_branch_pressure: Mapping[str, float] = field(default_factory=dict)
+    default_entry: DBEntry = field(
+        default_factory=lambda: DBEntry(latency=1.0, pressure={}, note="default")
+    )
+    frequency_ghz: float = 2.5
+
+    # -- lookup ------------------------------------------------------------
+
+    def lookup(self, form: InstructionForm) -> InstructionCost:
+        """Resolve a parsed instruction form to its cost record.
+
+        Lookup order: exact ``mnemonic:signature``; the signature with memory
+        operands substituted by their register class (plus generic load/store
+        split); bare ``mnemonic``; machine default (with a warning).
+        """
+        sig = form.operand_signature()
+        key = f"{form.mnemonic}:{sig}"
+        if key in self.db:
+            return InstructionCost(form=form, entry=self.db[key])
+
+        if "m" in sig:
+            # Try register-form entry + split load/store µ-ops.
+            for repl in ("f", "r", "v"):
+                reg_key = f"{form.mnemonic}:{sig.replace('m', repl)}"
+                if reg_key in self.db:
+                    return InstructionCost(
+                        form=form,
+                        entry=self.db[reg_key],
+                        load=self.load_entry if form.loads else None,
+                        store=self.store_entry if form.stores else None,
+                    )
+
+        if form.mnemonic in self.db:
+            return InstructionCost(form=form, entry=self.db[form.mnemonic])
+
+        # Mnemonic-family fallback (e.g. ``b.ne`` -> ``b``).
+        family = form.mnemonic.split(".")[0]
+        if family in self.db:
+            return InstructionCost(form=form, entry=self.db[family])
+
+        warnings.warn(
+            f"[{self.name}] no DB entry for '{key}'; using default "
+            f"(latency={self.default_entry.latency})",
+            stacklevel=2,
+        )
+        return InstructionCost(form=form, entry=self.default_entry)
+
+    def resolve_kernel(self, kernel) -> Tuple[InstructionCost, ...]:
+        """Resolve all instructions, applying macro fusion peepholes."""
+        costs = [self.lookup(form) for form in kernel]
+        if self.macro_fusion:
+            for i in range(len(costs) - 1):
+                a, b = costs[i], costs[i + 1]
+                if a.form.mnemonic.startswith(("cmp", "test")) and b.form.is_branch:
+                    costs[i] = InstructionCost(form=a.form, entry=a.entry, fused_away=True)
+                    costs[i + 1] = InstructionCost(
+                        form=b.form,
+                        entry=DBEntry(
+                            latency=b.entry.latency,
+                            pressure=dict(self.fused_branch_pressure),
+                            note="macro-fused cmp+jcc",
+                        ),
+                    )
+        return tuple(costs)

@@ -1,0 +1,58 @@
+"""Arm Neoverse N1 (AWS Graviton2) machine model.
+
+From the Arm Neoverse N1 Software Optimization Guide: two FP/ASIMD pipes
+(V0/V1), FADD latency 2, FMUL latency 3, FMADD 4; three integer ALUs (one
+branch+ALU); two load/store pipes, load-to-use 4, store-forward 4.
+Demonstrates the declarative machine-model claim on a post-paper core.
+"""
+
+from __future__ import annotations
+
+from repro.core.machine.model import DBEntry, MachineModel, uniform
+
+_FP2 = {"V0": 0.5, "V1": 0.5}
+_ALU3 = uniform(("I0", "I1", "I2"))
+_LD = {"L0": 0.5, "L1": 0.5}
+_ST = {"L0": 0.5, "L1": 0.5, "SD": 1.0}
+
+_DB = {
+    "fadd:fff": DBEntry(latency=2.0, pressure=_FP2),
+    "fsub:fff": DBEntry(latency=2.0, pressure=_FP2),
+    "fmul:fff": DBEntry(latency=3.0, pressure=_FP2),
+    "fmadd:ffff": DBEntry(latency=4.0, pressure=_FP2),
+    "fmov:ff": DBEntry(latency=1.0, pressure=_FP2),
+    "fdiv:fff": DBEntry(latency=15.0, pressure={"V0": 1.0, "DIV": 7.0}),
+    "ldr:fm": DBEntry(latency=4.0, pressure=_LD),
+    "ldr:rm": DBEntry(latency=4.0, pressure=_LD),
+    "ldp:ffm": DBEntry(latency=4.0, pressure=_LD),
+    "str:fm": DBEntry(latency=4.0, pressure=_ST),
+    "str:rm": DBEntry(latency=4.0, pressure=_ST),
+    "add:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "add:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "sub:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "subs:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "adds:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "mov:rr": DBEntry(latency=1.0, pressure=_ALU3),
+    "mov:ri": DBEntry(latency=1.0, pressure=_ALU3),
+    "cmp:rr": DBEntry(latency=1.0, pressure=_ALU3),
+    "cmp:ri": DBEntry(latency=1.0, pressure=_ALU3),
+    "eor:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "b": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "bne": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "beq": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "cbnz": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "nop": DBEntry(latency=0.0, pressure={}),
+}
+
+
+def neoverse_n1() -> MachineModel:
+    return MachineModel(
+        name="n1",
+        isa="aarch64",
+        ports=("I0", "I1", "I2", "V0", "V1", "L0", "L1", "SD", "DIV", "B"),
+        db=dict(_DB),
+        load_entry=DBEntry(latency=4.0, pressure=_LD, note="split load µ-op"),
+        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        macro_fusion=False,
+        frequency_ghz=2.5,
+    )

@@ -1,0 +1,68 @@
+"""Marvell ThunderX2 (Vulcan) machine model.
+
+Port layout follows the paper's Table II: six numbered ports P0-P5 plus a
+branch unit.  P0/P1 carry the FP pipes (FP latency 6 cy — the documented
+Vulcan FP add/mul latency), P0-P2 are the integer ALUs, P3/P4 are the
+load/store AGUs (load-to-use 4 cy), and stores additionally occupy the store
+buffer port P5 for one cycle.  Values from the Vulcan micro-architecture
+disclosures and the OSACA instruction database (semi-automatic ibench runs in
+the paper's artifact).
+"""
+
+from __future__ import annotations
+
+from repro.core.machine.model import DBEntry, MachineModel, uniform
+
+_FP2 = {"P0": 0.5, "P1": 0.5}
+_ALU3 = uniform(("P0", "P1", "P2"))
+_LD = {"P3": 0.5, "P4": 0.5}
+_ST = {"P3": 0.5, "P4": 0.5, "P5": 1.0}
+
+_DB = {
+    # Scalar FP (d-form NEON scalar): latency 6, tput 0.5/port over P0,P1.
+    "fadd:fff": DBEntry(latency=6.0, pressure=_FP2),
+    "fsub:fff": DBEntry(latency=6.0, pressure=_FP2),
+    "fmul:fff": DBEntry(latency=6.0, pressure=_FP2),
+    "fmadd:ffff": DBEntry(latency=6.0, pressure=_FP2),
+    "fmov:ff": DBEntry(latency=1.0, pressure=_FP2),
+    "fdiv:fff": DBEntry(latency=23.0, pressure={"P0": 1.0, "DIV": 16.0}),
+    # Loads/stores: load-to-use 4 cy, AGUs on P3/P4; store data port P5.
+    "ldr:fm": DBEntry(latency=4.0, pressure=_LD),
+    "ldr:rm": DBEntry(latency=4.0, pressure=_LD),
+    "ldp:ffm": DBEntry(latency=4.0, pressure=_LD),
+    "str:fm": DBEntry(latency=4.0, pressure=_ST),
+    "str:rm": DBEntry(latency=4.0, pressure=_ST),
+    # Integer ALU.
+    "add:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "add:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "sub:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "sub:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "mov:rr": DBEntry(latency=1.0, pressure={"P0": 0.5, "P1": 0.5}),
+    "mov:ri": DBEntry(latency=1.0, pressure={"P0": 0.5, "P1": 0.5}),
+    "cmp:rr": DBEntry(latency=1.0, pressure=_ALU3),
+    "cmp:ri": DBEntry(latency=1.0, pressure=_ALU3),
+    "eor:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "orr:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "and:rrr": DBEntry(latency=1.0, pressure=_ALU3),
+    "lsl:rri": DBEntry(latency=1.0, pressure=_ALU3),
+    "madd:rrrr": DBEntry(latency=3.0, pressure={"P0": 1.0}),
+    # Branch unit.
+    "b": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "bne": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "beq": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "cbnz": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "nop": DBEntry(latency=0.0, pressure={}),
+}
+
+
+def thunderx2() -> MachineModel:
+    return MachineModel(
+        name="tx2",
+        isa="aarch64",
+        ports=("P0", "P1", "P2", "P3", "P4", "P5", "DIV", "B"),
+        db=dict(_DB),
+        load_entry=DBEntry(latency=4.0, pressure=_LD, note="split load µ-op"),
+        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        macro_fusion=False,
+        frequency_ghz=2.2,
+    )

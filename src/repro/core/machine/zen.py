@@ -1,0 +1,65 @@
+"""AMD Zen (EPYC 7451, Zen 1) machine model.
+
+Zen 1 back end: four integer ALUs, two AGUs shared between loads and stores,
+four FP pipes (FADD on FP2/FP3 latency 3, FMUL on FP0/FP1 latency 4 — Agner
+Fog's Zen tables), a store-data path (SD), and a branch unit.  FP-domain
+load-to-use is 7 cy; the store node latency is the Zen store-forward latency
+(4 cy).  cmp+Jcc fusion is supported on Zen.
+"""
+
+from __future__ import annotations
+
+from repro.core.machine.model import DBEntry, MachineModel, uniform
+
+_FADD = {"FP2": 0.5, "FP3": 0.5}
+_FMUL = {"FP0": 0.5, "FP1": 0.5}
+_ALU4 = uniform(("ALU0", "ALU1", "ALU2", "ALU3"))
+_AGU = {"AGU0": 0.5, "AGU1": 0.5}
+_ST = {"AGU0": 0.5, "AGU1": 0.5, "SD": 1.0}
+
+_DB = {
+    "vaddsd:fff": DBEntry(latency=3.0, pressure=_FADD),
+    "vsubsd:fff": DBEntry(latency=3.0, pressure=_FADD),
+    "vmulsd:fff": DBEntry(latency=4.0, pressure=_FMUL),
+    "addsd:ff": DBEntry(latency=3.0, pressure=_FADD),
+    "mulsd:ff": DBEntry(latency=4.0, pressure=_FMUL),
+    "vfmadd231sd:fff": DBEntry(latency=5.0, pressure=_FMUL),
+    "vfmadd213sd:fff": DBEntry(latency=5.0, pressure=_FMUL),
+    "vdivsd:fff": DBEntry(latency=13.0, pressure={"FP3": 1.0, "DIV": 4.0}),
+    # Memory.
+    "movsd:mf": DBEntry(latency=7.0, pressure=_AGU),
+    "vmovsd:mf": DBEntry(latency=7.0, pressure=_AGU),
+    "movsd:fm": DBEntry(latency=4.0, pressure=_ST),
+    "vmovsd:fm": DBEntry(latency=4.0, pressure=_ST),
+    "movq:mr": DBEntry(latency=4.0, pressure=_AGU),
+    "movq:rm": DBEntry(latency=4.0, pressure=_ST),
+    "movsd:ff": DBEntry(latency=1.0, pressure={"FP0": 0.25, "FP1": 0.25, "FP2": 0.25, "FP3": 0.25}),
+    "movq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "movq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    # Integer ALU.
+    "addq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "addq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "subq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "leaq:mr": DBEntry(latency=1.0, pressure=_ALU4),
+    "cmpq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "cmpq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "jne": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "je": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "jmp": DBEntry(latency=1.0, pressure={"B": 1.0}),
+    "nop": DBEntry(latency=0.0, pressure={}),
+}
+
+
+def zen() -> MachineModel:
+    return MachineModel(
+        name="zen",
+        isa="x86",
+        ports=("ALU0", "ALU1", "ALU2", "ALU3", "AGU0", "AGU1",
+               "FP0", "FP1", "FP2", "FP3", "SD", "DIV", "B"),
+        db=dict(_DB),
+        load_entry=DBEntry(latency=7.0, pressure=_AGU, note="split load µ-op"),
+        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        macro_fusion=True,
+        fused_branch_pressure={"B": 1.0},
+        frequency_ghz=2.3,
+    )

@@ -1,0 +1,8 @@
+from repro.kernels.ops import (
+    flash_attention,
+    flash_decode,
+    fused_rmsnorm,
+    ssd_chunk_dual,
+)
+
+__all__ = ["flash_attention", "flash_decode", "fused_rmsnorm", "ssd_chunk_dual"]

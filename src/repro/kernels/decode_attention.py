@@ -1,0 +1,96 @@
+"""Flash-decode (split-KV single-query attention) Pallas TPU kernel.
+
+One query position per sequence against a long KV cache: grid =
+(batch*kv_heads, kv_blocks), KV innermost; online-softmax state for the G
+query heads of the group lives in VMEM scratch.  Length masking via the
+per-batch ``lengths`` vector (scalar prefetch).
+
+Layout: q (BK, G, D) — G = query heads per KV head (GQA group), kv (BK, T, D),
+lengths (BK,) int32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int, n_kv_blocks: int):
+    b = pl.program_id(0)
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    run = kj * block_k < length
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1)[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_bkgd(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray,
+    *, block_k: int = 512, interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (BK, G, D); k/v: (BK, T, D); lengths: (BK,) -> (BK, G, D)."""
+    bk, g, d = q.shape
+    t = k.shape[1]
+    assert t % block_k == 0, (t, block_k)
+    n_k = t // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bk, n_k),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j, lens: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j, lens: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j, lens: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, j, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bk, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+These map model-layer layouts (B, S, H, D) onto the kernels' flattened
+layouts, broadcast GQA KV heads, and select ``interpret=True`` automatically
+off-TPU (CPU validation mode — the kernel body runs in Python, proving the
+tiling/masking logic against ``ref.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_bkgd
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rmsnorm import rmsnorm_rows
+from repro.kernels.ssd_scan import ssd_intra_chunk
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """q: (B,S,H,D); k/v: (B,T,K,D) GQA -> (B,S,H,D)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    # Broadcast KV heads to query heads, flatten (B,H) -> BH.
+    kq = jnp.repeat(k, g, axis=2)
+    vq = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = kq.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = vq.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                              block_q=min(block_q, s), block_k=min(block_k, t),
+                              interpret=interpret)
+    return of.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, lengths, *, block_k=512, interpret=None):
+    """q: (B,1,H,D); k/v cache: (B,T,K,D); lengths (B,) -> (B,1,H,D)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qf = q[:, 0].reshape(b, kh, g, d).reshape(b * kh, g, d)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), kh)
+    of = decode_attention_bkgd(qf, kf, vf, lens,
+                               block_k=min(block_k, t), interpret=interpret)
+    return of.reshape(b, kh * g, d)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_dual(xdt, cum, bm, cm, *, interpret=None):
+    """Kernel-backed intra-chunk SSD (see mamba2.ssd_chunked for the full op)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return ssd_intra_chunk(xdt, cum, bm, cm, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_rmsnorm(x, w, *, eps=1e-5, interpret=None):
+    """x: (..., d) RMSNorm with learned scale."""
+    if interpret is None:
+        interpret = _interpret_default()
+    shape = x.shape
+    rows = 1
+    for dim in shape[:-1]:
+        rows *= dim
+    x2 = x.reshape(rows, shape[-1])
+    block = rows
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            block = cand
+            break
+    y = rmsnorm_rows(x2, w, eps=eps, block_rows=block, interpret=interpret)
+    return y.reshape(shape)

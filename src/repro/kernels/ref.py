@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (BH, S, D); k/v: (BH, T, D)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (BK, G, D); k/v: (BK, T, D); lengths: (BK,)."""
+    bk, g, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bgd,btd->bgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(t)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgt,btd->bgd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(xdt, cum, bm, cm):
+    """xdt (B,NC,H,Q,P), cum (B,NC,H,Q), bm/cm (B,NC,Q,N)."""
+    xdt = xdt.astype(jnp.float32)
+    cum = cum.astype(jnp.float32)
+    bm = bm.astype(jnp.float32)
+    cm = cm.astype(jnp.float32)
+    q = xdt.shape[3]
+    scores = jnp.einsum("bcin,bcjn->bcij", cm, bm)
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32)) > 0
+    diff = cum[..., :, None] - cum[..., None, :]  # (B,NC,H,Q,Q)
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    m = scores[:, :, None] * decay
+    y = jnp.einsum("bchij,bchjp->bchip", m, xdt)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,NC,H,Q)
+    states = jnp.einsum("bcjn,bchj,bchjp->bchnp", bm, decay_to_end, xdt)
+    return y, states
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

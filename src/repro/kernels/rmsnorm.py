@@ -1,0 +1,36 @@
+"""Fused RMSNorm(+scale) Pallas TPU kernel: one pass over the lane dim."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    w = w_ref[...].astype(jnp.float32)  # (d,)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-5,
+                 block_rows: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (R, d) row-major RMSNorm with learned scale w (d,)."""
+    r, d = x.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0, (r, block_rows)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,7 @@
+from repro.launch.mesh import (
+    make_elastic_mesh_context,
+    make_mesh_context,
+    make_production_mesh,
+)
+
+__all__ = ["make_elastic_mesh_context", "make_mesh_context", "make_production_mesh"]

@@ -1,0 +1,76 @@
+"""Elastic scaling: re-mesh + checkpoint reshard + batch/LR rescale.
+
+When the healthy device count changes (node failure or capacity growth), the
+controller: (1) picks a new mesh via ``make_elastic_mesh_context`` (largest
+model-parallel degree dividing the new count), (2) restores the latest
+checkpoint with the new mesh's shardings (restore is metadata-driven, so any
+source mesh works), (3) rescales global batch to keep per-device batch
+constant and applies linear LR scaling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.configs.base import RunConfig
+from repro.distributed import MeshContext
+from repro.launch.mesh import make_elastic_mesh_context
+
+
+@dataclass
+class ElasticPlan:
+    mesh_ctx: MeshContext
+    global_batch: int
+    learning_rate: float
+    reason: str
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh_ctx.mesh.size
+
+
+def plan_resize(
+    old_devices: int,
+    new_devices: int,
+    old_global_batch: int,
+    old_lr: float,
+    *,
+    model_parallel: Optional[int] = None,
+) -> ElasticPlan:
+    """Compute the post-resize execution plan."""
+    ctx = make_elastic_mesh_context(new_devices, model_parallel)
+    per_device = max(old_global_batch // max(old_devices, 1), 1)
+    data_ways = ctx.data_size
+    new_batch = per_device * ctx.mesh.size
+    # Keep batch divisible by the data axis.
+    new_batch = max((new_batch // data_ways) * data_ways, data_ways)
+    new_lr = old_lr * new_batch / max(old_global_batch, 1)
+    return ElasticPlan(
+        mesh_ctx=ctx,
+        global_batch=new_batch,
+        learning_rate=new_lr,
+        reason=f"resize {old_devices}->{new_devices} devices "
+               f"(mesh {dict(ctx.mesh.shape)})",
+    )
+
+
+def apply_resize(plan: ElasticPlan, cfg, run: RunConfig, ckpt_dir):
+    """Restore the latest checkpoint onto the new mesh (reshard-on-load)."""
+    import jax
+
+    from repro.checkpoint import latest_checkpoint, restore_checkpoint
+    from repro.distributed import set_mesh_context
+    from repro.train.state import abstract_train_state, state_shardings
+
+    set_mesh_context(plan.mesh_ctx)
+    try:
+        target = abstract_train_state(cfg)
+        shardings = state_shardings(target, plan.mesh_ctx, run)
+        path = latest_checkpoint(ckpt_dir)
+        if path is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        state, step = restore_checkpoint(path, target, shardings)
+        return state, step
+    finally:
+        set_mesh_context(None)

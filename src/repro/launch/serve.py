@@ -1,0 +1,58 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id>``.
+
+Loads (or randomly initializes) a model, then serves a batch of synthetic
+requests through the continuous-batching engine — the CPU-scale counterpart
+of the decode_* dry-run cells.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import RunConfig, get_config, list_archs, tiny_variant
+from repro.models import init_params
+from repro.serving import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--no-tiny", dest="tiny", action="store_false")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = tiny_variant(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch_size=args.batch_size)
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, size=args.prompt_len))
+               for _ in range(args.requests)]
+    frontend = None
+    if cfg.frontend != "none":
+        frontend = jax.numpy.ones(
+            (args.batch_size, cfg.frontend_len, cfg.d_model), jax.numpy.bfloat16)
+
+    t0 = time.time()
+    results = engine.generate(prompts, max_new_tokens=args.max_new_tokens,
+                              frontend=frontend)
+    dt = time.time() - t0
+    total_new = sum(len(r.tokens) for r in results)
+    print(f"{len(results)} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s)")
+    for r in results[:4]:
+        print(f"  req {r.request_id}: {r.tokens[:12]}")
+
+
+if __name__ == "__main__":
+    main()

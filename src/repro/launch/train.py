@@ -1,0 +1,112 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+
+Wires every substrate layer together: config registry, mesh, sharded train
+state, deterministic data pipeline, jitted train step, async checkpointing,
+heartbeat/straggler monitoring, and checkpoint/restart supervision.  On this
+CPU container it trains the tiny variants end-to-end (examples/train_tiny.py);
+on a real pod the same driver scales via --no-tiny + the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
+from repro.configs import RunConfig, get_config, list_archs, tiny_variant
+from repro.data import DataPipeline
+from repro.distributed import MeshContext, set_mesh_context
+from repro.launch.ft import HeartbeatRegistry, StragglerDetector
+from repro.launch.mesh import make_elastic_mesh_context, make_mesh_context
+from repro.launch.specs import batch_shardings, input_specs
+from repro.train import init_train_state, make_train_step
+from repro.train.state import abstract_train_state, state_shardings
+
+
+def train_loop(cfg, run: RunConfig, *, steps: int, global_batch: int,
+               seq_len: int, ckpt_dir=None, seed: int = 0,
+               mesh_ctx: MeshContext = None, checkpoint_every: int = 0,
+               log_every: int = 10, restore: bool = True):
+    if mesh_ctx is None:
+        mesh_ctx = make_elastic_mesh_context()
+    set_mesh_context(mesh_ctx)
+    try:
+        step_fn = jax.jit(make_train_step(cfg, run), donate_argnums=(0,))
+        state = init_train_state(cfg, jax.random.PRNGKey(seed))
+        start_step = 0
+        ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        if ckpt_dir and restore:
+            path = latest_checkpoint(ckpt_dir)
+            if path is not None:
+                shardings = state_shardings(
+                    abstract_train_state(cfg), mesh_ctx, run)
+                state, start_step = restore_checkpoint(path, state, shardings)
+                print(f"restored checkpoint @ step {start_step}")
+
+        pipeline = DataPipeline(cfg, global_batch, seq_len, seed=seed,
+                                start_step=start_step)
+        hb = HeartbeatRegistry(timeout_s=120.0)
+        stragglers = StragglerDetector()
+        host = "host0"
+
+        metrics_out = []
+        t_wall = time.time()
+        for step in range(start_step, start_step + steps):
+            batch = next(pipeline)
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            hb.beat(host)
+            stragglers.record(host, dt)
+            if (step + 1) % log_every == 0 or step == start_step:
+                loss = float(metrics["loss"])
+                toks = global_batch * seq_len / dt
+                print(f"step {step + 1:5d}  loss {loss:8.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                      f"{toks:,.0f} tok/s  {dt * 1e3:.0f} ms/step")
+                metrics_out.append({"step": step + 1, "loss": loss,
+                                    "tokens_per_s": toks})
+            if ckpt and checkpoint_every and (step + 1) % checkpoint_every == 0:
+                ckpt.save(step + 1, state)
+        if ckpt:
+            ckpt.save(start_step + steps, state)
+            ckpt.wait()
+        pipeline.close()
+        wall = time.time() - t_wall
+        print(f"done: {steps} steps in {wall:.1f}s "
+              f"({steps * global_batch * seq_len / wall:,.0f} tok/s sustained)")
+        return state, metrics_out
+    finally:
+        set_mesh_context(None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--no-tiny", dest="tiny", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = tiny_variant(cfg)
+    run = RunConfig(attention_impl="chunked", attention_chunk=64,
+                    remat="full", zero=False, warmup_steps=20,
+                    total_steps=args.steps)
+    train_loop(cfg, run, steps=args.steps, global_batch=args.global_batch,
+               seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+               checkpoint_every=args.checkpoint_every, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

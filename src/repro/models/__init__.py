@@ -1,0 +1,9 @@
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = ["decode_step", "forward_train", "init_cache", "init_params", "prefill"]

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN: GShard-style grouped top-k dispatch with capacity.
+
+Tokens are split into groups (``moe_group_size``); each group routes
+independently with per-group expert capacity C = ceil(top_k * S_g * cf / E).
+Dispatch/combine are einsums so GSPMD can shard them: groups over the data
+axes, experts over the model axis (expert parallelism) — the group->expert
+resharding is the all-to-all the roofline's ICI term sees.
+
+Supports DeepSeek-MoE fine-grained routing (64 routed top-6 + 2 shared
+experts) and Phi-3.5-MoE (16 routed top-2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models.layers import DATA, MODEL
+
+
+def _swiglu(x: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray) -> jnp.ndarray:
+    gate_up = jnp.einsum("...d,df->...f", x, wi)
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(gate) * up, wo)
+
+
+def route_topk(
+    logits: jnp.ndarray, top_k: int, capacity: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k routing with per-group capacity.
+
+    logits: (G, S, E).  Returns (dispatch (G,S,E,C) bool-ish float,
+    combine (G,S,E,C) float, aux_loss scalar).
+    """
+    g, s, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, top_k)  # (G,S,k)
+    topk_probs = topk_probs / jnp.maximum(
+        jnp.sum(topk_probs, axis=-1, keepdims=True), 1e-9)
+
+    # Position of each (token, k-slot) within its expert's queue, computed
+    # slot-major so earlier tokens win capacity (GShard semantics).
+    onehot = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)  # (G,S,k,E)
+    slot_major = jnp.swapaxes(onehot, 1, 2).reshape(g, top_k * s, e)
+    positions = jnp.cumsum(slot_major, axis=1) - slot_major  # (G,k*S,E)
+    positions = jnp.swapaxes(positions.reshape(g, top_k, s, e), 1, 2)  # (G,S,k,E)
+    pos_in_expert = jnp.sum(positions * onehot, axis=-1)  # (G,S,k)
+    keep = pos_in_expert < capacity
+
+    # aux load-balancing loss (Switch-style): E * mean(frac_tokens * frac_probs)
+    token_frac = jnp.mean(jnp.sum(onehot, axis=2), axis=1)  # (G,E)
+    prob_frac = jnp.mean(probs, axis=1)  # (G,E)
+    aux = e * jnp.mean(jnp.sum(token_frac * prob_frac, axis=-1))
+
+    pos_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), capacity,
+                            dtype=jnp.float32) * keep[..., None]  # (G,S,k,C)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", topk_probs, onehot, pos_oh)
+    return dispatch, combine, aux
+
+
+def route_topk_indices(
+    logits: jnp.ndarray, top_k: int, capacity: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Index-based routing (the gather-dispatch path).
+
+    Returns (topk_idx (G,S,k), gates (G,S,k), pos (G,S,k), keep (G,S,k),
+    aux) — same semantics as :func:`route_topk` without materializing the
+    (G,S,E,C) dispatch tensors.
+    """
+    g, s, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, top_k)
+    gates = topk_probs / jnp.maximum(
+        jnp.sum(topk_probs, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)  # (G,S,k,E)
+    slot_major = jnp.swapaxes(onehot, 1, 2).reshape(g, top_k * s, e)
+    positions = jnp.cumsum(slot_major, axis=1) - slot_major
+    positions = jnp.swapaxes(positions.reshape(g, top_k, s, e), 1, 2)
+    pos_in_expert = jnp.sum(positions * onehot, axis=-1).astype(jnp.int32)
+    keep = pos_in_expert < capacity
+
+    token_frac = jnp.mean(jnp.sum(onehot, axis=2), axis=1)
+    prob_frac = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(token_frac * prob_frac, axis=-1))
+    return topk_idx, gates, pos_in_expert, keep, aux
+
+
+def _moe_gather_dispatch(params, xg, cfg, capacity):
+    """Gather/scatter dispatch: no dense (G,S,E,C) one-hot matmuls.
+
+    FLOPs ~ expert GEMMs only; dispatch/combine are index ops (§Perf
+    iteration: the einsum dispatch costs T*topk*cf*S_g*d MACs — an order of
+    magnitude more than the expert compute for small-capacity MoE).
+    """
+    g, s, d = xg.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    logits = jnp.einsum("gsd,de->gse", xg, params["router"])
+    topk_idx, gates, pos, keep, aux = route_topk_indices(logits, k, capacity)
+
+    # Scatter token ids into (G, E, C+1) slot table (overflow -> slot C).
+    slot_token = jnp.zeros((g, e, capacity + 1), jnp.int32)
+    slot_fill = jnp.zeros((g, e, capacity + 1), xg.dtype)
+    gi = jnp.arange(g)[:, None, None]
+    si = jnp.broadcast_to(jnp.arange(s)[None, :, None], (g, s, k))
+    pos_c = jnp.where(keep, pos, capacity)
+    slot_token = slot_token.at[gi, topk_idx, pos_c].set(si, mode="drop")
+    slot_fill = slot_fill.at[gi, topk_idx, pos_c].set(1.0, mode="drop")
+    slot_token = slot_token[..., :capacity]  # (G,E,C)
+    slot_fill = slot_fill[..., :capacity]
+
+    # Gather tokens into expert slots: (G,E,C,d), then expert-shard.
+    expert_in = jnp.take_along_axis(
+        xg[:, None, :, :], slot_token[..., None], axis=2)
+    expert_in = expert_in * slot_fill[..., None]
+    expert_in = jnp.swapaxes(expert_in, 0, 1)  # (E,G,C,d)
+    # Experts over model, groups over data: without the DATA entry every
+    # data shard replicates the full expert GEMM (16x redundant compute --
+    # found by the per-op FLOP profile, Perf iteration 3).
+    expert_in = constrain(expert_in, MODEL, DATA, None, None)
+
+    gate_up = jnp.einsum("egcd,edf->egcf", expert_in, params["moe_wi"])
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    expert_out = jnp.einsum("egcf,efd->egcd", jax.nn.silu(gate) * up,
+                            params["moe_wo"])
+    expert_out = constrain(expert_out, MODEL, DATA, None, None)
+    expert_out = jnp.swapaxes(expert_out, 0, 1)  # (G,E,C,d)
+
+    # Combine: per (token, k-slot) gather from its expert slot.
+    flat = expert_out.reshape(g, e * capacity, d)
+    slot_of_token = topk_idx * capacity + jnp.minimum(pos, capacity - 1)
+    picked = jnp.take_along_axis(
+        flat[:, None, :, :],
+        slot_of_token.transpose(0, 2, 1)[..., None], axis=2)  # (G,k,S,d)
+    picked = picked.transpose(0, 2, 1, 3)  # (G,S,k,d)
+    w = (gates * keep).astype(xg.dtype)  # dropped slots contribute zero
+    yg = jnp.einsum("gsk,gskd->gsd", w, picked)
+    return yg, aux
+
+
+def moe_block(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cfg,
+    dispatch_mode: str = "einsum",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (B, S, d), aux loss.  Shared experts run densely."""
+    b, s, d = x.shape
+    e = cfg.moe_experts
+    group = min(cfg.moe_group_size, b * s)
+    while (b * s) % group != 0:  # largest group size dividing the token count
+        group -= 1
+    n_groups = (b * s) // group
+    xg = x.reshape(n_groups, group, d)
+    xg = constrain(xg, DATA, None, None)
+
+    capacity = max(int(math.ceil(cfg.moe_top_k * group * cfg.moe_capacity_factor / e)), 1)
+
+    if dispatch_mode == "gather":
+        yg, aux = _moe_gather_dispatch(params, xg, cfg, capacity)
+    else:
+        logits = jnp.einsum("gsd,de->gse", xg, params["router"])
+        dispatch, combine, aux = route_topk(logits, cfg.moe_top_k, capacity)
+        dispatch = constrain(dispatch.astype(x.dtype), DATA, None, MODEL, None)
+        combine = constrain(combine.astype(x.dtype), DATA, None, MODEL, None)
+
+        # Dispatch: group-sharded tokens -> expert-sharded slots (all-to-all).
+        expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+        expert_in = constrain(expert_in, MODEL, DATA, None, None)
+
+        gate_up = jnp.einsum("egcd,edf->egcf", expert_in, params["moe_wi"])
+        gate, up = jnp.split(gate_up, 2, axis=-1)
+        expert_out = jnp.einsum("egcf,efd->egcd", jax.nn.silu(gate) * up,
+                                params["moe_wo"])
+        expert_out = constrain(expert_out, MODEL, DATA, None, None)
+
+        yg = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+    y = yg.reshape(b, s, d)
+
+    if cfg.moe_shared > 0:
+        y = y + _swiglu(x, params["shared_wi"], params["shared_wo"])
+    return constrain(y, DATA, None, None), aux
+
+
+def init_moe_params(key, cfg, layer_count: int, dtype) -> Dict[str, jnp.ndarray]:
+    """Stacked-over-layers MoE parameters: leading dim = layer_count."""
+    d, e = cfg.d_model, cfg.moe_experts
+    ffe = cfg.moe_d_ff or cfg.d_ff
+    keys = jax.random.split(key, 5)
+    scale = 0.02
+    out = {
+        "router": jax.random.normal(keys[0], (layer_count, d, e), dtype) * scale,
+        "moe_wi": jax.random.normal(keys[1], (layer_count, e, d, 2 * ffe), dtype) * scale,
+        "moe_wo": jax.random.normal(keys[2], (layer_count, e, ffe, d), dtype) * scale,
+    }
+    if cfg.moe_shared > 0:
+        fsh = cfg.moe_shared * ffe
+        out["shared_wi"] = jax.random.normal(keys[3], (layer_count, d, 2 * fsh), dtype) * scale
+        out["shared_wo"] = jax.random.normal(keys[4], (layer_count, fsh, d), dtype) * scale
+    return out

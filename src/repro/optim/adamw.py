@@ -1,0 +1,87 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule,
+and optional int8 gradient compression (error-feedback free, stochastic-
+rounding free — a bandwidth lever for the DP gradient reduction).
+
+Optimizer moments are stored in float32 regardless of parameter dtype and may
+be ZeRO-sharded over the data axes (see ``repro.train.state``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any  # first moment (f32 pytree)
+    nu: Any  # second moment (f32 pytree)
+    count: jnp.ndarray  # step counter
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=zeros,
+                    nu=jax.tree.map(jnp.zeros_like, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int):
+    step_f = step.astype(jnp.float32)
+    warm = base_lr * (step_f + 1.0) / max(warmup, 1)
+    progress = jnp.clip((step_f - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step_f < warmup, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization (gradient compression)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def adamw_update(
+    params,
+    grads,
+    opt: OptState,
+    lr: jnp.ndarray,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if grad_clip > 0 else jnp.ones(())
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = opt.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), opt.nu, grads)
+
+    def upd(p, m, v):
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(mu=mu, nu=nu, count=count), metrics

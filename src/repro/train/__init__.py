@@ -1,0 +1,6 @@
+from repro.train.loss import cross_entropy_loss
+from repro.train.state import TrainState, init_train_state
+from repro.train.step import eval_step, make_train_step, train_step
+
+__all__ = ["TrainState", "cross_entropy_loss", "eval_step", "init_train_state",
+           "make_train_step", "train_step"]

@@ -1,0 +1,63 @@
+"""Next-token cross entropy, optionally chunked over the sequence so the
+(B, S, V) logits tensor is never materialized (a §Perf memory-term lever:
+per-chunk peak is (B, chunk, V))."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models.layers import DATA, MODEL
+
+
+def _ce(logits: jnp.ndarray, labels: jnp.ndarray,
+        vocab: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sum CE and correct-token count for (N, V) logits / (N,) labels."""
+    logits = logits.astype(jnp.float32)
+    if vocab and logits.shape[-1] != vocab:  # mask vocabulary padding
+        cols = jnp.arange(logits.shape[-1])
+        logits = jnp.where(cols[None, :] < vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss_sum = jnp.sum(lse - picked)
+    acc = jnp.sum(jnp.argmax(logits, axis=-1) == labels)
+    return loss_sum, acc
+
+
+def cross_entropy_loss(
+    hidden: jnp.ndarray,  # (B, S, d)
+    head: jnp.ndarray,  # (d, V)
+    labels: jnp.ndarray,  # (B, S)
+    chunk: int = 0,
+    vocab: int = 0,  # true vocab size when the head is padded
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean next-token CE.  ``chunk``>0 scans over sequence chunks."""
+    b, s, d = hidden.shape
+    n = b * s
+    h2 = hidden.reshape(n, d)
+    l2 = labels.reshape(n)
+
+    if chunk <= 0 or n % chunk != 0 or n <= chunk:
+        logits = h2.astype(jnp.float32) @ head.astype(jnp.float32)
+        logits = constrain(logits, DATA, MODEL)
+        loss_sum, acc = _ce(logits, l2, vocab)
+        return loss_sum / n, acc / n
+
+    n_chunks = n // chunk
+    hc = h2.reshape(n_chunks, chunk, d)
+    lc = l2.reshape(n_chunks, chunk)
+
+    def body(carry, inputs):
+        loss_sum, acc = carry
+        h, lab = inputs
+        logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+        logits = constrain(logits, DATA, MODEL)
+        ls, ac = _ce(logits, lab, vocab)
+        return (loss_sum + ls, acc + ac), None
+
+    (loss_sum, acc), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc))
+    return loss_sum / n, acc / n

@@ -1,0 +1,63 @@
+"""Train state: parameters + optimizer moments + step, with sharding specs."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed import MeshContext, param_sharding_rules, zero_extend
+from repro.models import init_params
+from repro.optim import OptState, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jnp.ndarray
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    """ShapeDtypeStruct state for AOT lowering (no allocation)."""
+    return jax.eval_shape(lambda k: init_train_state(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def state_shardings(
+    state: TrainState, mesh_ctx: MeshContext, run: RunConfig,
+) -> TrainState:
+    """NamedSharding pytree matching a TrainState.
+
+    Parameters follow the tensor/expert-parallel rules; optimizer moments are
+    additionally ZeRO-sharded over the data axes when ``run.zero``.
+    """
+    p_shard = param_sharding_rules(state.params, mesh_ctx)
+    if run.fsdp:
+        # FSDP: parameters (hence grads) also sharded over the data axes;
+        # XLA all-gathers them per scan step and reduce-scatters grads.
+        p_shard = jax.tree.map(
+            lambda s, p: zero_extend(s, p.shape, mesh_ctx),
+            p_shard, state.params)
+
+    def opt_leaf(path_sharding, leaf):
+        if run.zero:
+            return zero_extend(path_sharding, leaf.shape, mesh_ctx)
+        return path_sharding
+
+    mu_shard = jax.tree.map(opt_leaf, p_shard, state.opt.mu)
+    nu_shard = jax.tree.map(opt_leaf, p_shard, state.opt.nu)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    scalar = NamedSharding(mesh_ctx.mesh, P())
+    return TrainState(
+        params=p_shard,
+        opt=OptState(mu=mu_shard, nu=nu_shard, count=scalar),
+        step=scalar,
+    )

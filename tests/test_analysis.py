@@ -1,0 +1,206 @@
+"""Unit + property tests for TP / CP / LCD on synthetic kernels with known
+answers, plus hypothesis invariants of the analyses."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import (
+    analyze_kernel, build_dag, critical_path, loop_carried_dependencies,
+    throughput_analysis,
+)
+from repro.core.isa import parse_aarch64, parse_x86
+from repro.core.machine import cascade_lake, thunderx2, zen
+
+
+def tx2_kernel(body: str):
+    return parse_aarch64(f"# OSACA-BEGIN\n{body}\n# OSACA-END")
+
+
+# -- constructed kernels with known answers -----------------------------------
+
+
+def test_tp_single_fadd():
+    k = tx2_kernel("fadd d0, d1, d2")
+    tp = throughput_analysis(k, thunderx2())
+    assert tp.block_throughput == pytest.approx(0.5)  # 0.5 cy on P0/P1
+
+
+def test_tp_many_independent_adds():
+    body = "\n".join(f"fadd d{i}, d20, d21" for i in range(8))
+    tp = throughput_analysis(tx2_kernel(body), thunderx2())
+    assert tp.block_throughput == pytest.approx(4.0)  # 8 * 0.5 per port
+
+
+def test_cp_serial_chain():
+    body = """
+fadd d1, d0, d0
+fadd d2, d1, d1
+fadd d3, d2, d2
+"""
+    cp = critical_path(tx2_kernel(body), thunderx2())
+    assert cp.length == pytest.approx(18.0)  # 3 x lat 6, node-weighted
+
+
+def test_cp_parallel_chains_takes_longest():
+    body = """
+fadd d1, d0, d0
+fadd d2, d1, d1
+fmul d11, d10, d10
+"""
+    cp = critical_path(tx2_kernel(body), thunderx2())
+    assert cp.length == pytest.approx(12.0)
+
+
+def test_lcd_simple_accumulator():
+    k = tx2_kernel("fadd d0, d0, d1")
+    lcd = loop_carried_dependencies(k, thunderx2())
+    assert lcd.longest == pytest.approx(6.0)
+
+
+def test_lcd_two_chains_reports_longest():
+    body = """
+fadd d0, d0, d1
+fmul d2, d2, d3
+fadd d4, d2, d2
+fmul d2, d2, d5
+"""
+    # d2 chain: fmul(6) -> fmul(6) per iteration = 12; d0 chain = 6.
+    lcd = loop_carried_dependencies(tx2_kernel(body), thunderx2())
+    assert lcd.longest == pytest.approx(12.0)
+    assert len(lcd.chains) >= 2
+
+
+def test_lcd_none_when_independent():
+    body = """
+fadd d0, d1, d2
+fmul d3, d4, d5
+"""
+    lcd = loop_carried_dependencies(tx2_kernel(body), thunderx2())
+    assert lcd.longest == 0.0
+
+
+def test_zero_idiom_breaks_dependency():
+    body = """
+fadd d0, d0, d1
+eor x2, x2, x2
+"""
+    # x2 self-dep broken by the zero idiom: only the d0 chain remains.
+    lcd = loop_carried_dependencies(tx2_kernel(body), thunderx2())
+    assert all("eor" not in
+               [tx2_kernel(body).instructions[i].mnemonic
+                for i in c.instr_indices]
+               for c in lcd.chains)
+
+
+def test_memory_operand_split_x86():
+    """vaddsd with a memory source = arith pressure + load pressure, and a
+    load vertex on the dependency path."""
+    asm = """# OSACA-BEGIN
+addq $8, %rax
+vaddsd (%rax), %xmm1, %xmm2
+# OSACA-END"""
+    k = parse_x86(asm)
+    model = cascade_lake()
+    tp = throughput_analysis(k, model)
+    assert tp.port_pressure["P2"] == pytest.approx(0.5)  # split load
+    cp = critical_path(k, model)
+    # addq(1) -> load vertex(6) -> add(4), node-weighted.
+    assert cp.length == pytest.approx(11.0)
+
+
+def test_macro_fusion_csx():
+    asm = """# OSACA-BEGIN
+cmpq %r13, %rax
+jne .L1
+# OSACA-END"""
+    tp = throughput_analysis(parse_x86(asm), cascade_lake())
+    assert tp.port_pressure["P0"] == 0.0  # cmp fused away
+    assert tp.port_pressure["P6"] == pytest.approx(1.0)
+
+
+def test_dag_is_forward_only():
+    k = tx2_kernel("""
+fadd d1, d0, d0
+fadd d2, d1, d1
+fadd d1, d2, d2
+""")
+    dag = build_dag(k, thunderx2(), copies=2)
+    for src, succs in enumerate(dag.succs):
+        for dst in succs:
+            assert dst > src
+
+
+# -- hypothesis properties ------------------------------------------------------
+
+
+@st.composite
+def random_fp_kernel(draw):
+    """Random TX2 FP kernel text over a small register file."""
+    n = draw(st.integers(2, 12))
+    lines = []
+    for _ in range(n):
+        op = draw(st.sampled_from(["fadd", "fmul"]))
+        dst = draw(st.integers(0, 7))
+        a = draw(st.integers(0, 7))
+        b = draw(st.integers(0, 7))
+        lines.append(f"{op} d{dst}, d{a}, d{b}")
+    return "\n".join(lines)
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_fp_kernel())
+def test_property_cp_at_least_lcd(body):
+    """One period of any cyclic chain is a path in the 1-copy DAG extended by
+    the backedge — CP >= LCD for single-block kernels without writebacks."""
+    a = analyze_kernel(tx2_kernel(body), thunderx2(), unroll=1)
+    assert a.cp_per_it >= a.lcd_per_it - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_fp_kernel())
+def test_property_tp_lower_bound(body):
+    """TP <= CP always (throughput bound cannot exceed the serial bound),
+    and TP equals total-pressure max over ports."""
+    k = tx2_kernel(body)
+    a = analyze_kernel(k, thunderx2(), unroll=1)
+    assert a.tp_per_it <= a.cp_per_it + 1e-9
+    n_fp = sum(1 for i in k if i.mnemonic in ("fadd", "fmul"))
+    assert a.tp_per_it == pytest.approx(n_fp * 0.5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_fp_kernel())
+def test_property_cp_monotone_under_duplication(body):
+    """Appending a copy of the body never shortens the critical path."""
+    k1 = tx2_kernel(body)
+    k2 = tx2_kernel(body + "\n" + body)
+    cp1 = critical_path(k1, thunderx2()).length
+    cp2 = critical_path(k2, thunderx2()).length
+    assert cp2 >= cp1 - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_fp_kernel(), st.integers(1, 4))
+def test_property_tp_scales_linearly(body, reps):
+    k1 = tx2_kernel(body)
+    kn = tx2_kernel("\n".join([body] * reps))
+    tp1 = throughput_analysis(k1, thunderx2()).block_throughput
+    tpn = throughput_analysis(kn, thunderx2()).block_throughput
+    assert tpn == pytest.approx(reps * tp1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_fp_kernel())
+def test_property_lcd_chain_members_form_cycle(body):
+    """Every reported chain's members must read a value produced by the
+    previous chain member (in cyclic order)."""
+    k = tx2_kernel(body)
+    lcd = loop_carried_dependencies(k, thunderx2())
+    for chain in lcd.chains:
+        idxs = list(chain.instr_indices)
+        for a, b in zip(idxs, idxs[1:]):
+            dsts = set(k.instructions[a].dest_registers)
+            srcs = set(k.instructions[b].source_registers)
+            assert dsts & srcs, (body, idxs)

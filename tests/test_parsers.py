@@ -1,0 +1,147 @@
+"""Unit tests for the x86 (AT&T) and AArch64 assembly front-ends."""
+
+from repro.core.isa import parse_aarch64, parse_x86
+from repro.core.isa.instruction import MemoryRef, Register
+from repro.core.isa.parser_aarch64 import parse_line_aarch64
+from repro.core.isa.parser_x86 import parse_line_x86
+
+
+# -- AArch64 -----------------------------------------------------------------
+
+
+def test_a64_load_indexed():
+    f = parse_line_aarch64("ldr d31, [x15, x18, lsl 3]")
+    assert f.mnemonic == "ldr"
+    assert f.dest_registers == ("v31",)
+    assert set(f.source_registers) == {"x15", "x18"}
+    assert f.loads[0].scale == 8
+
+
+def test_a64_store_post_index_writeback():
+    f = parse_line_aarch64("str d5, [x14], 8")
+    assert f.stores[0].post_index
+    assert "x14" in f.dest_registers  # writeback
+    assert "v5" in f.source_registers
+
+
+def test_a64_fp_three_operand():
+    f = parse_line_aarch64("fadd d3, d1, d30")
+    assert f.dest_registers == ("v3",)
+    assert set(f.source_registers) == {"v1", "v30"}
+
+
+def test_a64_register_aliasing():
+    f = parse_line_aarch64("fmov s2, s3")
+    assert f.dest_registers == ("v2",)  # s2 aliases v2
+
+
+def test_a64_branch_and_cmp():
+    b = parse_line_aarch64("bne .L20")
+    assert b.is_branch and not b.dest_registers
+    c = parse_line_aarch64("cmp x7, x15")
+    assert not c.dest_registers
+    assert set(c.source_registers) == {"x7", "x15"}
+
+
+def test_a64_zero_idiom():
+    f = parse_line_aarch64("eor x3, x3, x3")
+    assert f.is_dep_breaking
+    assert f.source_registers == ()
+
+
+def test_a64_negative_offset():
+    f = parse_line_aarch64("str d20, [x15, -24]")
+    assert f.stores[0].offset == -24
+
+
+# -- x86 ----------------------------------------------------------------------
+
+
+def test_x86_avx_three_operand():
+    f = parse_line_x86("vaddsd %xmm0, %xmm4, %xmm5")
+    assert f.dest_registers == ("xmm5",)
+    assert set(f.source_registers) == {"xmm0", "xmm4"}
+
+
+def test_x86_sse_two_operand_rmw():
+    f = parse_line_x86("addsd %xmm1, %xmm2")
+    assert f.dest_registers == ("xmm2",)
+    assert set(f.source_registers) == {"xmm1", "xmm2"}  # RMW reads dest
+
+
+def test_x86_mov_not_rmw():
+    f = parse_line_x86("movsd %xmm1, %xmm2")
+    assert f.source_registers == ("xmm1",)
+
+
+def test_x86_load_base_index_scale():
+    f = parse_line_x86("movsd -8(%rsi,%rbx,8), %xmm1")
+    assert f.dest_registers == ("xmm1",)
+    assert f.loads[0].offset == -8
+    assert f.loads[0].scale == 8
+    assert set(f.source_registers) == {"rsi", "rbx"}
+
+
+def test_x86_store():
+    f = parse_line_x86("movsd %xmm0, 16(%rax,%rbx,8)")
+    assert not f.dest_registers
+    assert f.stores and f.stores[0].offset == 16
+
+
+def test_x86_sub_register_aliasing():
+    f = parse_line_x86("movl %eax, %edx")
+    assert f.dest_registers == ("rdx",)
+    assert f.source_registers == ("rax",)
+
+
+def test_x86_immediate_rmw():
+    f = parse_line_x86("addq $32, %rax")
+    assert f.dest_registers == ("rax",)
+    assert "rax" in f.source_registers
+
+
+def test_x86_zero_idiom():
+    f = parse_line_x86("vxorpd %xmm0, %xmm0, %xmm0")
+    assert f.is_dep_breaking and f.source_registers == ()
+
+
+def test_x86_ymm_aliases_xmm():
+    f = parse_line_x86("vaddpd %ymm1, %ymm2, %ymm3")
+    assert f.dest_registers == ("xmm3",)
+
+
+# -- marker extraction ---------------------------------------------------------
+
+
+def test_marker_extraction_osaca_comments():
+    asm = """
+    nop
+# OSACA-BEGIN
+    fadd d0, d1, d2
+# OSACA-END
+    nop
+"""
+    k = parse_aarch64(asm)
+    assert len(k) == 1 and k.instructions[0].mnemonic == "fadd"
+
+
+def test_marker_extraction_iaca_bytes():
+    asm = """
+    movl $111, %ebx
+    .byte 100,103,144
+    vaddsd %xmm0, %xmm1, %xmm2
+    movl $222, %ebx
+    .byte 100,103,144
+"""
+    k = parse_x86(asm)
+    assert [i.mnemonic for i in k] == ["vaddsd"]
+
+
+def test_marker_fallback_innermost_loop():
+    asm = """
+.L1:
+    fadd d0, d0, d1
+    bne .L1
+"""
+    k = parse_aarch64(asm)
+    assert [i.mnemonic for i in k] == ["fadd", "bne"]

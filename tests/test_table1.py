@@ -1,0 +1,83 @@
+"""Paper validation: Table I (Gauss-Seidel on TX2/CLX/ZEN) and Table II
+structure for TX2.  These are the faithful-reproduction gates."""
+
+import pytest
+
+from repro.core import analyze_kernel, cascade_lake, parse_aarch64, parse_x86, thunderx2, zen
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM, TABLE1
+
+CASES = [
+    ("tx2", GS_TX2_ASM, parse_aarch64, thunderx2),
+    ("csx", GS_CLX_ASM, parse_x86, cascade_lake),
+    ("zen", GS_ZEN_ASM, parse_x86, zen),
+]
+
+
+@pytest.fixture(scope="module")
+def analyses():
+    out = {}
+    for arch, asm, parse, model in CASES:
+        out[arch] = analyze_kernel(parse(asm, name="gauss-seidel"), model(),
+                                   unroll=4)
+    return out
+
+
+@pytest.mark.parametrize("arch", [c[0] for c in CASES])
+def test_throughput_matches_paper(analyses, arch):
+    assert round(analyses[arch].tp_per_it, 2) == TABLE1[arch].tp
+
+
+@pytest.mark.parametrize("arch", [c[0] for c in CASES])
+def test_lcd_matches_paper(analyses, arch):
+    assert analyses[arch].lcd_per_it == pytest.approx(TABLE1[arch].lcd)
+
+
+@pytest.mark.parametrize("arch", [c[0] for c in CASES])
+def test_cp_matches_paper(analyses, arch):
+    assert analyses[arch].cp_per_it == pytest.approx(TABLE1[arch].cp)
+
+
+@pytest.mark.parametrize("arch", [c[0] for c in CASES])
+def test_bracket_contains_measurement(analyses, arch):
+    """The paper's headline claim: measured cy/it lies in [TP, CP] and close
+    to the LCD."""
+    a = analyses[arch]
+    measured = TABLE1[arch].measured_cy_per_it
+    assert a.tp_per_it <= measured <= a.cp_per_it
+    assert abs(measured - a.lcd_per_it) / measured < 0.05
+
+
+def test_tx2_port_pressure_matches_table2(analyses):
+    """Bottom row of Table II: per-iteration port pressures."""
+    tp = analyses["tx2"].tp
+    per_it = {p: v / 4 for p, v in tp.port_pressure.items()}
+    assert round(per_it["P0"], 2) == 2.46
+    assert round(per_it["P1"], 2) == 2.46
+    assert round(per_it["P2"], 2) == 0.33
+    assert per_it["P3"] == pytest.approx(2.0)
+    assert per_it["P4"] == pytest.approx(2.0)
+    assert per_it["P5"] == pytest.approx(1.0)
+
+
+def test_tx2_lcd_chain_is_fp_chain(analyses):
+    """Table II LCD column: exactly the 12 fadd/fmul ops carry the cycle."""
+    a = analyses["tx2"]
+    kernel = a.kernel
+    chain_mnemonics = [kernel.instructions[i].mnemonic
+                       for i in sorted(a.lcd.on_longest)]
+    assert len(chain_mnemonics) == 12
+    assert set(chain_mnemonics) == {"fadd", "fmul"}
+    assert chain_mnemonics.count("fmul") == 4
+
+
+def test_tx2_cp_includes_store_load_segment(analyses):
+    """Table II CP column: the str->ldr writeback segment is on the CP."""
+    a = analyses["tx2"]
+    mnems = {a.kernel.instructions[i].mnemonic for i in a.cp.on_path}
+    assert "str" in mnems and "ldr" in mnems
+
+
+def test_report_renders(analyses):
+    rep = analyses["tx2"].report()
+    assert "per high-level iteration" in rep
+    assert " 72.0" in rep and "100.0" in rep

@@ -4,6 +4,7 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   table1_gauss_seidel  — paper Table I: TP/LCD/CP on TX2/CLX/ZEN vs. published
   table2_tx2_detail    — paper Table II: TX2 port pressures
   analyzer_throughput  — analysis cost per instruction form (tool perf)
+  analyzer_scaling     — analysis cost growth on 32/128/512-instr kernels
   ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
   hlo_roofline         — HLO parse + three-term roofline on a compiled step
   train_step_tiny      — end-to-end tiny train step wall time
@@ -45,9 +46,11 @@ def table1_gauss_seidel() -> None:
         us = _timeit(lambda: analyze_kernel(kernel, model, unroll=4))
         a = analyze_kernel(kernel, model, unroll=4)
         row = TABLE1[arch]
+        match = (round(a.tp_per_it, 2) == row.tp
+                 and round(a.lcd_per_it, 2) == row.lcd
+                 and round(a.cp_per_it, 2) == row.cp)
         derived = (f"TP={a.tp_per_it:.2f}/{row.tp};LCD={a.lcd_per_it:.2f}/"
-                   f"{row.lcd};CP={a.cp_per_it:.2f}/{row.cp};"
-                   f"match={round(a.tp_per_it, 2) == row.tp and a.lcd_per_it == row.lcd and a.cp_per_it == row.cp}")
+                   f"{row.lcd};CP={a.cp_per_it:.2f}/{row.cp};match={match}")
         _row(f"table1_{arch}", us, derived)
 
 
@@ -74,6 +77,51 @@ def analyzer_throughput() -> None:
          f"{us / len(kernel):.2f}us_per_instruction;n={len(kernel)}")
 
 
+def _synthetic_kernel(n: int):
+    """Mixed FP / load / writeback-store / pointer-bump AArch64 kernel."""
+    from repro.core import parse_aarch64
+
+    lines, regs = [], 8
+    for i in range(n):
+        if i % 7 == 3:
+            lines.append(f"ldr d{i % regs}, [x1, {8 * (i % 16)}]")
+        elif i % 11 == 5:
+            lines.append(f"str d{(i + 1) % regs}, [x2], 8")
+        elif i % 5 == 2:
+            lines.append(f"add x{3 + i % 4}, x{3 + i % 4}, 8")
+        else:
+            lines.append(f"fadd d{i % regs}, d{(i + 1) % regs}, d{(i + 2) % regs}")
+    return parse_aarch64(
+        "# OSACA-BEGIN\n" + "\n".join(lines) + "\n# OSACA-END",
+        name=f"synthetic-{n}")
+
+
+def analyzer_scaling() -> None:
+    """Full-analysis cost on growing synthetic kernels.
+
+    ``derived`` reports the growth exponent between successive sizes and a
+    ``subquadratic`` verdict: each 4x size step must cost well under the 16x
+    of quadratic growth (the batched single-sweep engine's point — the seed's
+    per-source LCD loop was quadratic).  The 14x threshold plus warmup keeps
+    the verdict stable against small-n timing noise.
+    """
+    from repro.core import analyze_kernel, thunderx2
+
+    model = thunderx2()
+    times = {}
+    for n in (32, 128, 512):
+        kernel = _synthetic_kernel(n)
+        times[n] = _timeit(lambda: analyze_kernel(kernel, model),
+                           repeats=5, warmup=2)
+        _row(f"analyzer_scaling_{n}", times[n], f"n={n}")
+    g1 = times[128] / times[32]
+    g2 = times[512] / times[128]
+    subquadratic = g1 < 14.0 and g2 < 14.0
+    _row("analyzer_scaling", times[512],
+         f"growth_32_128={g1:.1f}x;growth_128_512={g2:.1f}x;"
+         f"subquadratic={subquadratic}")
+
+
 def ibench_pipeline() -> None:
     import jax.numpy as jnp
     from repro.core.bench import populate_entry
@@ -82,8 +130,8 @@ def ibench_pipeline() -> None:
                      ("exp", jnp.exp),
                      ("matmul_chain", lambda x: x @ x * 1e-2)]:
         t0 = time.perf_counter()
-        result, entry = populate_entry(name, op, shape=(64, 64),
-                                       chain_length=16, n_parallel=2)
+        result, _ = populate_entry(name, op, shape=(64, 64),
+                                   chain_length=16, n_parallel=2)
         us = (time.perf_counter() - t0) * 1e6
         _row(f"ibench_{name}", us,
              f"lat={result.latency_us:.2f}us;tput={result.inverse_throughput_us:.2f}us;"
@@ -162,6 +210,7 @@ def main() -> None:
     table1_gauss_seidel()
     table2_tx2_detail()
     analyzer_throughput()
+    analyzer_scaling()
     ibench_pipeline()
     hlo_roofline()
     train_step_tiny()

@@ -2,9 +2,9 @@
 analysis, for x86 + AArch64 assembly (faithful reproduction) and for XLA HLO
 on TPU meshes (the framework-integrated adaptation, ``repro.core.hlo``)."""
 
-from repro.core.analysis import analyze_kernel
+from repro.core.analysis import analyze_kernel, analyze_kernels
 from repro.core.isa import parse_aarch64, parse_x86
 from repro.core.machine import cascade_lake, thunderx2, zen
 
-__all__ = ["analyze_kernel", "parse_aarch64", "parse_x86",
+__all__ = ["analyze_kernel", "analyze_kernels", "parse_aarch64", "parse_x86",
            "cascade_lake", "thunderx2", "zen"]

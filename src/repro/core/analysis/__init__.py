@@ -1,8 +1,15 @@
-from repro.core.analysis.throughput import ThroughputResult, throughput_analysis
+from repro.core.analysis.throughput import (ThroughputResult,
+                                            throughput_analysis,
+                                            throughput_from_costs)
 from repro.core.analysis.dag import DependencyDAG, Node, build_dag
-from repro.core.analysis.critical_path import CriticalPathResult, critical_path
-from repro.core.analysis.lcd import LCDResult, loop_carried_dependencies
-from repro.core.analysis.analyze import Analysis, analyze_kernel
+from repro.core.analysis.critical_path import (CriticalPathResult,
+                                               critical_path,
+                                               critical_path_from_dag)
+from repro.core.analysis.lcd import (LCDResult, lcd_from_dag,
+                                     loop_carried_dependencies)
+from repro.core.analysis.analyze import (Analysis, analyze_kernel,
+                                         analyze_kernels,
+                                         clear_analysis_cache)
 
 __all__ = [
     "Analysis",
@@ -12,8 +19,13 @@ __all__ = [
     "Node",
     "ThroughputResult",
     "analyze_kernel",
+    "analyze_kernels",
     "build_dag",
+    "clear_analysis_cache",
     "critical_path",
+    "critical_path_from_dag",
+    "lcd_from_dag",
     "loop_carried_dependencies",
     "throughput_analysis",
+    "throughput_from_costs",
 ]

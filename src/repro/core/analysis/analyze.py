@@ -1,13 +1,28 @@
-"""Combined OSACA analysis: TP + CP + LCD with a Table-II-style report."""
+"""Combined OSACA analysis: TP + CP + LCD with a Table-II-style report.
+
+Single-sweep pipeline: one ``resolve_kernel`` and one dual-writeback 2-copy
+DAG build are shared across all three analyses — TP accumulates pressure from
+the resolved costs, LCD runs the batched all-sources sweep over the DAG's
+split-writeback view, and CP reuses the same DAG's copy-0 data-chained view.
+
+``analyze_kernels`` is the batch entry point (one warm model cache across
+kernels, process-level LRU keyed by kernel text + model name + unroll) for
+serving paths that analyze many — often repeated — kernels concurrently.
+"""
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, Iterable, List
 
-from repro.core.analysis.critical_path import CriticalPathResult, critical_path
-from repro.core.analysis.lcd import LCDResult, loop_carried_dependencies
-from repro.core.analysis.throughput import ThroughputResult, throughput_analysis
+from repro.core.analysis.critical_path import (CriticalPathResult,
+                                               critical_path_from_dag)
+from repro.core.analysis.dag import build_dag
+from repro.core.analysis.lcd import LCDResult, lcd_from_dag
+from repro.core.analysis.throughput import (ThroughputResult,
+                                            throughput_from_costs)
 from repro.core.isa.instruction import Kernel
 from repro.core.machine.model import MachineModel
 
@@ -82,11 +97,115 @@ class Analysis:
 
 
 def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1) -> Analysis:
+    """Full TP/CP/LCD analysis: one cost resolution, one DAG build."""
+    costs = model.resolve_kernel(kernel)
+    dag = build_dag(kernel, model, copies=2, dual_writeback=True, costs=costs)
     return Analysis(
         kernel=kernel,
         model=model,
         unroll=unroll,
-        tp=throughput_analysis(kernel, model),
-        cp=critical_path(kernel, model),
-        lcd=loop_carried_dependencies(kernel, model),
+        tp=throughput_from_costs(costs, model),
+        cp=critical_path_from_dag(dag),
+        lcd=lcd_from_dag(dag, len(kernel)),
     )
+
+
+# -- batch API + process-level analysis cache --------------------------------
+
+
+class LRUCache:
+    """Small thread-safe LRU with hit/miss stats, shared by the analysis
+    caches here and in ``repro.serving.analysis``."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._data: "OrderedDict[tuple, Analysis]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = {"hits": 0, "misses": 0}
+
+    def get(self, key):
+        with self._lock:
+            hit = self._data.get(key)
+            if hit is not None:
+                self._data.move_to_end(key)
+                self.stats["hits"] += 1
+            return hit
+
+    def put(self, key, value) -> None:
+        """Record a miss and insert its result, evicting oldest entries."""
+        with self._lock:
+            self.stats["misses"] += 1
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+
+    def count_extra_hits(self, n: int = 1) -> None:
+        """Account for requests satisfied by in-flight dedup (no lookup)."""
+        with self._lock:
+            self.stats["hits"] += n
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.stats["hits"] = self.stats["misses"] = 0
+
+
+_cache = LRUCache(512)
+
+
+def _form_text(form) -> str:
+    # Parsed kernels carry the assembly text; programmatically built forms
+    # (empty ``raw``) need a descriptor covering everything the analyses
+    # read, or distinct kernels would collide in the cache.
+    if form.raw:
+        return form.raw
+    return (f"{form.mnemonic}:{form.operand_signature()}"
+            f":{','.join(form.source_registers)}"
+            f">{','.join(form.dest_registers)}"
+            f":{int(form.is_branch)}{int(form.is_dep_breaking)}")
+
+
+def _cache_key(kernel: Kernel, model: MachineModel, unroll: int) -> tuple:
+    text = "\n".join(_form_text(form) for form in kernel)
+    return (model.name, kernel.isa, unroll, text)
+
+
+def clear_analysis_cache() -> None:
+    _cache.clear()
+
+
+def analyze_kernels(
+    kernels: Iterable[Kernel],
+    model: MachineModel,
+    unroll: int = 1,
+    use_cache: bool = True,
+) -> List[Analysis]:
+    """Analyze a batch of kernels against one machine model.
+
+    Repeated kernel texts (the common case on a serving path: many requests
+    for the same hot loop) hit a process-level LRU keyed by
+    ``(model name, isa, unroll, kernel text)``; all misses share the model's
+    warm instruction-lookup memo, so a batch of *n* distinct kernels pays the
+    instruction-DB probing cost once per distinct instruction form, not once
+    per occurrence.
+
+    Caveats of cache identity: machine models are assumed immutable after
+    construction and distinguished by ``model.name`` (mutating a model's DB
+    in place after analyses have been cached serves stale results), and a
+    cache hit returns the first requester's ``Analysis`` object — including
+    its ``kernel.name`` — for all textually identical kernels.
+    """
+    out: List[Analysis] = []
+    for kernel in kernels:
+        if not use_cache:
+            out.append(analyze_kernel(kernel, model, unroll=unroll))
+            continue
+        key = _cache_key(kernel, model, unroll)
+        hit = _cache.get(key)
+        if hit is not None:
+            out.append(hit)
+            continue
+        analysis = analyze_kernel(kernel, model, unroll=unroll)
+        _cache.put(key, analysis)
+        out.append(analysis)
+    return out

@@ -1,0 +1,153 @@
+"""Batched all-sources longest-path sweep over a topologically-ordered DAG.
+
+The LCD analysis needs, for every candidate source ``s``, the longest
+node-weighted path from ``s`` to every other node.  Running one DP per source
+costs O(S·(V+E)) Python-interpreted work; instead we keep a ``(S × V)``
+NumPy distance matrix and make a *single* forward sweep over node ids (ids
+are already topological: every dependency edge points forward), reducing each
+node's column from its predecessor columns with a vectorized
+``max``-over-predecessors.  Total work is O(V) sweep steps of O(S · indeg)
+vectorized arithmetic — one pass, regardless of how many sources there are.
+
+Semantics match the reference scalar DP bit-for-bit, including tie-breaking:
+
+* among equal-distance predecessors the *first* in insertion order wins
+  (``argmax`` returns the first maximum, as the scalar ``>`` scan does);
+* a source node starts at its own weight unless a longer (or equal) path
+  from the row's allowed starts already reaches it — path-through wins ties.
+
+The same helper drives the HLO while-body LCD
+(:mod:`repro.core.hlo.lcd`), whose rows are loop-state tuple indices with
+*multiple* allowed start nodes each.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+NEG_INF = float("-inf")
+
+# Unreachable sentinel for the batched sweep.  A finite sentinel instead of
+# -inf lets the inner loop skip reachability masks entirely: real path sums
+# (|weight sums| < 1e12 in both the cycle and seconds domains) can never climb
+# within 1e17 of it, and float64 has whole-number resolution ~128 at 1e18, so
+# sentinel + weights stays far below REACH_THRESHOLD.
+UNREACHABLE = -1.0e18
+REACH_THRESHOLD = -1.0e17
+
+
+def is_reached(value: float) -> bool:
+    return value > REACH_THRESHOLD
+
+
+def pred_csr_from_lists(preds: Sequence[Sequence[int]]) -> Tuple[np.ndarray, np.ndarray]:
+    """Predecessor adjacency lists -> CSR ``(ptr, idx)`` in insertion order."""
+    ptr = np.zeros(len(preds) + 1, dtype=np.int64)
+    for v, p in enumerate(preds):
+        ptr[v + 1] = ptr[v] + len(p)
+    idx = np.fromiter((u for p in preds for u in p), dtype=np.int64,
+                      count=int(ptr[-1]))
+    return ptr, idx
+
+
+def batched_longest_paths(
+    ptr: np.ndarray,
+    idx: np.ndarray,
+    weights: np.ndarray,
+    starts_per_row: Sequence[Sequence[int]],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Single-sweep longest paths from each row's allowed start set.
+
+    ``ptr``/``idx`` is the predecessor CSR (node ids topologically ordered,
+    edges forward); ``weights`` the per-node weight vector; row ``r`` may only
+    start paths at nodes in ``starts_per_row[r]``.
+
+    Returns ``(D, P)``: ``D[r, v]`` is the maximum weight sum over paths from
+    ``starts_per_row[r]`` ending at ``v`` (below :data:`REACH_THRESHOLD` — see
+    :func:`is_reached` — if unreachable), ``P[r, v]`` the predecessor of ``v``
+    on that path (``-1`` at path starts; arbitrary junk on unreachable
+    entries, which callers must filter with :func:`is_reached` first).
+    """
+    n = len(weights)
+    n_rows = len(starts_per_row)
+    # Node-major layout: D[v] is one contiguous row per node, so the
+    # per-node predecessor gather reads (indeg × rows) contiguous rows and
+    # writes one contiguous row — the sweep's whole working set streams.
+    D = np.full((n, n_rows), UNREACHABLE, dtype=np.float64)
+    P = np.full((n, n_rows), -1, dtype=np.int64)
+    if n == 0 or n_rows == 0:
+        return D.T, P.T
+
+    # node id -> rows allowed to start there.
+    start_rows: Dict[int, List[int]] = {}
+    for r, starts in enumerate(starts_per_row):
+        for v in starts:
+            start_rows.setdefault(int(v), []).append(r)
+
+    ptr_l = ptr.tolist()
+    w_l = list(weights)
+    cols = np.arange(n_rows)
+    for v in range(n):
+        lo, hi = ptr_l[v], ptr_l[v + 1]
+        if hi - lo == 1:
+            u = idx[lo]
+            np.add(D[u], w_l[v], out=D[v])
+            P[v] = u
+        elif hi > lo:
+            p = idx[lo:hi]
+            sub = D[p]                          # (indeg × rows) gather
+            arg = sub.argmax(axis=0)            # first max: scalar tie-break
+            np.add(sub[arg, cols], w_l[v], out=D[v])
+            P[v] = p[arg]
+        rows = start_rows.get(v)
+        if rows is not None:
+            dv, pv = D[v], P[v]
+            wv = w_l[v]
+            for r in rows:
+                # Path-through wins ties (strict <), matching the scalar DP.
+                if dv[r] < wv:
+                    dv[r] = wv
+                    pv[r] = -1
+    return D.T, P.T
+
+
+def single_longest_path(
+    preds: Sequence[Sequence[int]],
+    weights: Sequence[float],
+) -> Tuple[List[float], List[int]]:
+    """Scalar all-starts longest path (every node may begin a path).
+
+    The CP analysis needs just one unrestricted DP; a plain Python sweep over
+    precomputed predecessor lists beats NumPy's per-node dispatch overhead at
+    these graph sizes and keeps tie-breaking identical to the reference.
+    """
+    n = len(weights)
+    dist = [0.0] * n
+    parent = [-1] * n
+    for v in range(n):
+        best = NEG_INF
+        best_pred = -1
+        for u in preds[v]:
+            if dist[u] > best:
+                best = dist[u]
+                best_pred = u
+        if best == NEG_INF:
+            dist[v] = weights[v]
+        else:
+            dist[v] = best + weights[v]
+            parent[v] = best_pred
+    return dist, parent
+
+
+def backtrack(parent_row: Sequence[int], v: int) -> List[int]:
+    """Follow parent pointers from ``v`` back to a path start; returns the
+    node ids in forward order."""
+    path: List[int] = []
+    v = int(v)
+    while v != -1:
+        path.append(v)
+        v = int(parent_row[v])
+    path.reverse()
+    return path

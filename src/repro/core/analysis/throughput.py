@@ -27,8 +27,15 @@ class ThroughputResult:
         return self.block_throughput / unroll
 
 
-def throughput_analysis(kernel: Kernel, model: MachineModel) -> ThroughputResult:
-    costs = model.resolve_kernel(kernel)
+def throughput_analysis(kernel: Kernel, model: MachineModel,
+                        costs=None) -> ThroughputResult:
+    if costs is None:
+        costs = model.resolve_kernel(kernel)
+    return throughput_from_costs(costs, model)
+
+
+def throughput_from_costs(costs, model: MachineModel) -> ThroughputResult:
+    """Accumulate port pressure from already-resolved instruction costs."""
     totals: Dict[str, float] = {p: 0.0 for p in model.ports}
     per_instruction = []
     for cost in costs:

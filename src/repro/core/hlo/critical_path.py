@@ -72,11 +72,18 @@ def _computation_cp(
         else:
             weights.append(cost.op_seconds(op, comp))
 
-    for i, op in enumerate(comp.ops):
+    # Same forward sweep as the assembly engine, over resolved predecessor
+    # lists (every node may start a path at floor 0: a zero-time pred never
+    # becomes a parent, matching the batched sweep's path-through rule).
+    preds = [
+        [j for operand in op.operands
+         if (j := index.get(operand)) is not None and j < i]
+        for i, op in enumerate(comp.ops)
+    ]
+    for i in range(n):
         best, best_p = 0.0, -1
-        for operand in op.operands:
-            j = index.get(operand)
-            if j is not None and j < i and dist[j] > best:
+        for j in preds[i]:
+            if dist[j] > best:
                 best, best_p = dist[j], j
         dist[i] = best + weights[i]
         parent[i] = best_p

@@ -8,6 +8,12 @@ in the root — a cyclic chain across iterations, exactly the paper's 2-copy
 construction specialised to HLO's explicit loop-carry structure.  This is
 what exposes the sequential SSM state chain in Mamba-2, the KV-cache update
 chain in decode, and optimizer-state serialization in training steps.
+
+All tuple indices of a body are searched in one batched topological sweep
+(:func:`repro.core.analysis.sweep.batched_longest_paths`): one row of the
+distance matrix per loop-state element, each row's allowed starts being that
+element's ``get-tuple-element`` reads — the same all-sources engine the
+assembly LCD uses, instead of one DP per tuple index.
 """
 
 from __future__ import annotations
@@ -16,6 +22,10 @@ import re
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
+from repro.core.analysis.sweep import (backtrack, batched_longest_paths,
+                                       is_reached, pred_csr_from_lists)
 from repro.core.hlo.costs import HLOCostModel
 from repro.core.hlo.machine import TPUChip, TPU_V5E
 from repro.core.hlo.parser import HLOComputation, HLOModule, HLOOp, parse_hlo
@@ -66,7 +76,6 @@ def _body_chains(
     if comp is None or comp.root is None or comp.root.opcode != "tuple":
         return []
     index = {op.name: i for i, op in enumerate(comp.ops)}
-    n = len(comp.ops)
     weights = [cost.op_seconds(op, comp) for op in comp.ops]
 
     # get-tuple-element reads of the loop state, by tuple index.
@@ -83,41 +92,39 @@ def _body_chains(
     chains: List[CarriedChain] = []
     root_operands = comp.root.operands
 
+    # One matrix row per loop-state element; its allowed path starts are the
+    # element's GTE reads.  All rows share one topological sweep.
+    rows: List[Tuple[int, int, List[int]]] = []  # (tuple idx, target, starts)
     for tuple_idx, starts in gte_by_index.items():
         if tuple_idx >= len(root_operands):
             continue
         target = index.get(root_operands[tuple_idx])
         if target is None:
             continue
-        # Longest path from any GTE of this index to the stored-back value.
-        neg = float("-inf")
-        dist = [neg] * n
-        parent = [-1] * n
-        starts_set = set(starts)
-        for i, op in enumerate(comp.ops):
-            if i in starts_set:
-                dist[i] = max(dist[i], weights[i])
-            best, best_p = neg, -1
-            for operand in op.operands:
-                j = index.get(operand)
-                if j is not None and j < i and dist[j] > best:
-                    best, best_p = dist[j], j
-            if best != neg and best + weights[i] >= dist[i]:
-                dist[i] = best + weights[i]
-                parent[i] = best_p
-        if dist[target] == neg:
+        rows.append((tuple_idx, target, starts))
+    if not rows:
+        return chains
+
+    preds = [
+        [j for operand in op.operands
+         if (j := index.get(operand)) is not None and j < i]
+        for i, op in enumerate(comp.ops)
+    ]
+    ptr, idx = pred_csr_from_lists(preds)
+    D, P = batched_longest_paths(ptr, idx, np.asarray(weights, dtype=float),
+                                 [starts for _, _, starts in rows])
+
+    for row, (tuple_idx, target, _) in enumerate(rows):
+        if not is_reached(D[row, target]):
             continue
-        path: List[str] = []
-        v = target
-        while v != -1:
-            path.append(comp.ops[v].name)
-            v = parent[v]
-        path.reverse()
-        if len(path) <= 1:
+        path_ids = backtrack(P[row].tolist(), target)
+        if len(path_ids) <= 1:
             continue  # pass-through state (e.g. untouched weights)
         chains.append(CarriedChain(
             while_op=while_op.name, body=body_name, tuple_index=tuple_idx,
-            seconds=dist[target], ops=tuple(path), trip_count=trips,
+            seconds=float(D[row, target]), ops=tuple(comp.ops[v].name
+                                                     for v in path_ids),
+            trip_count=trips,
         ))
     return chains
 

@@ -173,6 +173,8 @@ def roofline_from_compiled(
     execution counts.
     """
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # newer jax: one dict per program
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     ca_bytes = float(ca.get("bytes accessed", 0.0))
     module = parse_hlo(hlo_text if hlo_text is not None else compiled.as_text())

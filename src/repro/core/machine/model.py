@@ -21,6 +21,10 @@ from typing import Dict, Mapping, Optional, Tuple
 
 from repro.core.isa.instruction import InstructionForm
 
+# Unknown (model name, mnemonic:signature) pairs already warned about, so a
+# missing entry is reported once per process instead of per occurrence.
+_WARNED_DEFAULTS: set = set()
+
 
 def uniform(ports: Tuple[str, ...], inverse_throughput: float = 1.0) -> Dict[str, float]:
     """Fixed-probability pressure: spread ``inverse_throughput`` cycles evenly."""
@@ -90,6 +94,12 @@ class MachineModel:
         default_factory=lambda: DBEntry(latency=1.0, pressure={}, note="default")
     )
     frequency_ghz: float = 2.5
+    # Memoized lookup results keyed by (mnemonic, signature, has_loads,
+    # has_stores): repeated instruction forms (every copy of every unrolled
+    # instance) resolve to the same (entry, load, store) parts, so probing
+    # the DB once per distinct form is enough.
+    _lookup_cache: Dict[tuple, tuple] = field(
+        default_factory=dict, repr=False, compare=False)
 
     # -- lookup ------------------------------------------------------------
 
@@ -98,39 +108,49 @@ class MachineModel:
 
         Lookup order: exact ``mnemonic:signature``; the signature with memory
         operands substituted by their register class (plus generic load/store
-        split); bare ``mnemonic``; machine default (with a warning).
+        split); bare ``mnemonic``; machine default (with a warning, once per
+        unknown ``(model, mnemonic:signature)`` pair).
         """
         sig = form.operand_signature()
+        cache_key = (form.mnemonic, sig, bool(form.loads), bool(form.stores))
+        parts = self._lookup_cache.get(cache_key)
+        if parts is None:
+            parts = self._lookup_parts(form, sig)
+            self._lookup_cache[cache_key] = parts
+        entry, load, store = parts
+        return InstructionCost(form=form, entry=entry, load=load, store=store)
+
+    def _lookup_parts(self, form: InstructionForm, sig: str):
+        """Uncached DB probe; returns ``(entry, load, store)``."""
         key = f"{form.mnemonic}:{sig}"
         if key in self.db:
-            return InstructionCost(form=form, entry=self.db[key])
+            return self.db[key], None, None
 
         if "m" in sig:
             # Try register-form entry + split load/store µ-ops.
             for repl in ("f", "r", "v"):
                 reg_key = f"{form.mnemonic}:{sig.replace('m', repl)}"
                 if reg_key in self.db:
-                    return InstructionCost(
-                        form=form,
-                        entry=self.db[reg_key],
-                        load=self.load_entry if form.loads else None,
-                        store=self.store_entry if form.stores else None,
-                    )
+                    return (self.db[reg_key],
+                            self.load_entry if form.loads else None,
+                            self.store_entry if form.stores else None)
 
         if form.mnemonic in self.db:
-            return InstructionCost(form=form, entry=self.db[form.mnemonic])
+            return self.db[form.mnemonic], None, None
 
         # Mnemonic-family fallback (e.g. ``b.ne`` -> ``b``).
         family = form.mnemonic.split(".")[0]
         if family in self.db:
-            return InstructionCost(form=form, entry=self.db[family])
+            return self.db[family], None, None
 
-        warnings.warn(
-            f"[{self.name}] no DB entry for '{key}'; using default "
-            f"(latency={self.default_entry.latency})",
-            stacklevel=2,
-        )
-        return InstructionCost(form=form, entry=self.default_entry)
+        if (self.name, key) not in _WARNED_DEFAULTS:
+            _WARNED_DEFAULTS.add((self.name, key))
+            warnings.warn(
+                f"[{self.name}] no DB entry for '{key}'; using default "
+                f"(latency={self.default_entry.latency})",
+                stacklevel=3,
+            )
+        return self.default_entry, None, None
 
     def resolve_kernel(self, kernel) -> Tuple[InstructionCost, ...]:
         """Resolve all instructions, applying macro fusion peepholes."""

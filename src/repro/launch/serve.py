@@ -3,6 +3,11 @@
 Loads (or randomly initializes) a model, then serves a batch of synthetic
 requests through the continuous-batching engine — the CPU-scale counterpart
 of the decode_* dry-run cells.
+
+``--mode analyze`` serves synthetic *kernel-analysis* traffic instead: many
+concurrent requests over a small set of hot assembly loops, amortized through
+the batched ``analyze_kernels`` API and its process-level LRU
+(``repro.serving.analysis.AnalysisService``).
 """
 
 from __future__ import annotations
@@ -10,16 +15,46 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from repro.configs import RunConfig, get_config, list_archs, tiny_variant
-from repro.models import init_params
-from repro.serving import ServeEngine
+
+
+def _serve_analysis(args) -> None:
+    from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM
+    from repro.serving import AnalysisRequest, AnalysisService
+
+    # Synthetic traffic: a stream of requests drawn from a few hot kernels,
+    # the common shape of analysis-in-a-tuning-loop workloads.
+    pool = [
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", isa="aarch64", unroll=4),
+        AnalysisRequest(asm=GS_CLX_ASM, arch="csx", isa="x86", unroll=4),
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", isa="aarch64", unroll=1),
+    ]
+    rng = np.random.default_rng(0)
+    requests = [pool[i] for i in rng.integers(0, len(pool), size=args.requests)]
+
+    service = AnalysisService()
+    t0 = time.time()
+    results = []
+    for start in range(0, len(requests), args.batch_size):
+        results.extend(
+            service.analyze_batch(requests[start:start + args.batch_size]))
+    dt = time.time() - t0
+    print(f"{len(results)} analysis requests in {dt * 1e3:.1f} ms "
+          f"({len(results) / max(dt, 1e-9):.0f} req/s)  "
+          f"cache hits={service.stats['hits']} misses={service.stats['misses']}")
+    for req, analysis in list(zip(requests, results))[:3]:
+        bracket = analysis.prediction_bracket()
+        print(f"  {req.arch}/{req.unroll}x: "
+              f"TP={bracket['lower_bound_tp']:.2f} "
+              f"LCD={bracket['expected_lcd']:.2f} "
+              f"CP={bracket['upper_bound_cp']:.2f} cy/it")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="generate", choices=("generate", "analyze"))
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
@@ -28,6 +63,15 @@ def main() -> None:
     ap.add_argument("--tiny", action="store_true", default=True)
     ap.add_argument("--no-tiny", dest="tiny", action="store_false")
     args = ap.parse_args()
+
+    if args.mode == "analyze":
+        _serve_analysis(args)
+        return
+
+    import jax
+
+    from repro.models import init_params
+    from repro.serving import ServeEngine
 
     cfg = get_config(args.arch)
     if args.tiny:

@@ -1,3 +1,5 @@
+from repro.serving.analysis import (AnalysisRequest, AnalysisService)
 from repro.serving.engine import GenerationResult, ServeEngine
 
-__all__ = ["GenerationResult", "ServeEngine"]
+__all__ = ["AnalysisRequest", "AnalysisService", "GenerationResult",
+           "ServeEngine"]

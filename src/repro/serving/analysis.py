@@ -1,0 +1,126 @@
+"""Kernel-analysis service for the serving path.
+
+Wraps the batched ``analyze_kernels`` engine behind a request-oriented API:
+callers submit raw assembly text (plus ISA / machine / unroll), the service
+parses, analyzes, and returns :class:`repro.core.analysis.Analysis` objects.
+Amortization happens at three levels:
+
+1. one :class:`MachineModel` instance per architecture lives for the service
+   lifetime, so its instruction-lookup memo stays warm across requests;
+2. batches go through ``analyze_kernels``, which shares the process-level
+   analysis LRU (keyed by kernel text + model name + unroll) — concurrent
+   requests for the same hot loop body pay for one analysis;
+3. parsed-kernel results are additionally cached here by request key, so a
+   repeat request skips even the parse.
+
+This is the CPU-side counterpart of the continuous-batching token engine in
+``repro.serving.engine``: many small independent requests, served out of one
+warm process.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.analysis import Analysis, analyze_kernels
+from repro.core.analysis.analyze import LRUCache
+from repro.core.isa import parse_aarch64, parse_x86
+from repro.core.machine import (MachineModel, cascade_lake, neoverse_n1,
+                                thunderx2, zen, zen2)
+
+_MODEL_FACTORIES: Dict[str, Callable[[], MachineModel]] = {
+    "tx2": thunderx2,
+    "csx": cascade_lake,
+    "zen": zen,
+    "zen2": zen2,
+    "n1": neoverse_n1,
+}
+
+_PARSERS = {
+    "aarch64": parse_aarch64,
+    "x86": parse_x86,
+}
+
+
+@dataclass(frozen=True)
+class AnalysisRequest:
+    asm: str
+    arch: str = "tx2"  # machine model id (see _MODEL_FACTORIES)
+    isa: str = "aarch64"  # "aarch64" | "x86"
+    unroll: int = 1
+    name: str = "kernel"
+
+    @property
+    def key(self) -> Tuple[str, str, str, int]:
+        return (self.arch, self.isa, self.asm, self.unroll)
+
+
+@dataclass
+class AnalysisService:
+    """Long-lived analysis frontend with per-request LRU caching."""
+
+    max_cached: int = 256
+    models: Dict[str, MachineModel] = field(default_factory=dict)
+    _cache: LRUCache = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        self._cache = LRUCache(self.max_cached)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self._cache.stats
+
+    def model_for(self, arch: str) -> MachineModel:
+        model = self.models.get(arch)
+        if model is None:
+            try:
+                model = _MODEL_FACTORIES[arch]()
+            except KeyError:
+                raise ValueError(
+                    f"unknown arch '{arch}'; known: {sorted(_MODEL_FACTORIES)}"
+                ) from None
+            self.models[arch] = model
+        return model
+
+    def analyze(self, request: AnalysisRequest) -> Analysis:
+        return self.analyze_batch([request])[0]
+
+    def analyze_batch(self, requests: Sequence[AnalysisRequest]) -> List[Analysis]:
+        """Serve a wave of analysis requests, deduplicating shared kernels.
+
+        Identical requests within the wave (and across waves, via the LRU)
+        are parsed and analyzed once; per (arch, unroll) group the distinct
+        kernels go through one ``analyze_kernels`` batch.
+        """
+        out: List[Optional[Analysis]] = [None] * len(requests)
+        # (arch, isa, unroll) -> list of (request positions, parsed kernel)
+        groups: Dict[tuple, List[Tuple[List[int], object]]] = {}
+        pending: Dict[tuple, List[int]] = {}
+        for pos, req in enumerate(requests):
+            hit = self._cache.get(req.key)
+            if hit is not None:
+                out[pos] = hit
+                continue
+            if req.key in pending:
+                # In-wave duplicate: analyzed once, but still a served hit.
+                pending[req.key].append(pos)
+                self._cache.count_extra_hits()
+                continue
+            pending[req.key] = [pos]
+            parser = _PARSERS.get(req.isa)
+            if parser is None:
+                raise ValueError(f"unknown isa '{req.isa}'")
+            kernel = parser(req.asm, name=req.name)
+            groups.setdefault((req.arch, req.unroll), []).append(
+                (pending[req.key], kernel))
+
+        for (arch, unroll), entries in groups.items():
+            model = self.model_for(arch)
+            analyses = analyze_kernels([k for _, k in entries], model,
+                                       unroll=unroll)
+            for (positions, _), analysis in zip(entries, analyses):
+                for pos in positions:
+                    out[pos] = analysis
+                self._cache.put(requests[positions[0]].key, analysis)
+        return out  # type: ignore[return-value]

@@ -37,6 +37,20 @@ class ServeEngine:
         self.max_len = max_len
         self._decode = jax.jit(
             lambda p, c, t: decode_step(p, cfg, self.run, c, t))
+        self._analysis = None
+
+    @property
+    def analysis(self):
+        """Co-resident kernel-analysis service (lazily constructed), sharing
+        this process's analysis LRU — see ``repro.serving.analysis``."""
+        if self._analysis is None:
+            from repro.serving.analysis import AnalysisService
+            self._analysis = AnalysisService()
+        return self._analysis
+
+    def analyze_asm(self, requests):
+        """Serve a batch of assembly-analysis requests alongside decoding."""
+        return self.analysis.analyze_batch(list(requests))
 
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
                  eos_id: Optional[int] = None,

@@ -1,10 +1,10 @@
 """Unit + property tests for TP / CP / LCD on synthetic kernels with known
-answers, plus hypothesis invariants of the analyses."""
+answers, plus randomized invariants of the analyses (seeded stdlib ``random``
+so the suite has no extra dependencies)."""
 
-import math
+import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.analysis import (
     analyze_kernel, build_dag, critical_path, loop_carried_dependencies,
@@ -132,25 +132,28 @@ fadd d1, d2, d2
             assert dst > src
 
 
-# -- hypothesis properties ------------------------------------------------------
+# -- randomized properties ----------------------------------------------------
 
 
-@st.composite
-def random_fp_kernel(draw):
+def random_fp_kernel(rng: random.Random) -> str:
     """Random TX2 FP kernel text over a small register file."""
-    n = draw(st.integers(2, 12))
+    n = rng.randint(2, 12)
     lines = []
     for _ in range(n):
-        op = draw(st.sampled_from(["fadd", "fmul"]))
-        dst = draw(st.integers(0, 7))
-        a = draw(st.integers(0, 7))
-        b = draw(st.integers(0, 7))
+        op = rng.choice(["fadd", "fmul"])
+        dst = rng.randint(0, 7)
+        a = rng.randint(0, 7)
+        b = rng.randint(0, 7)
         lines.append(f"{op} d{dst}, d{a}, d{b}")
     return "\n".join(lines)
 
 
-@settings(max_examples=60, deadline=None)
-@given(random_fp_kernel())
+def fp_kernel_cases(count: int = 60, seed: int = 0):
+    rng = random.Random(seed)
+    return [random_fp_kernel(rng) for _ in range(count)]
+
+
+@pytest.mark.parametrize("body", fp_kernel_cases(60, seed=1))
 def test_property_cp_at_least_lcd(body):
     """One period of any cyclic chain is a path in the 1-copy DAG extended by
     the backedge — CP >= LCD for single-block kernels without writebacks."""
@@ -158,8 +161,7 @@ def test_property_cp_at_least_lcd(body):
     assert a.cp_per_it >= a.lcd_per_it - 1e-9
 
 
-@settings(max_examples=60, deadline=None)
-@given(random_fp_kernel())
+@pytest.mark.parametrize("body", fp_kernel_cases(60, seed=2))
 def test_property_tp_lower_bound(body):
     """TP <= CP always (throughput bound cannot exceed the serial bound),
     and TP equals total-pressure max over ports."""
@@ -170,8 +172,7 @@ def test_property_tp_lower_bound(body):
     assert a.tp_per_it == pytest.approx(n_fp * 0.5)
 
 
-@settings(max_examples=60, deadline=None)
-@given(random_fp_kernel())
+@pytest.mark.parametrize("body", fp_kernel_cases(60, seed=3))
 def test_property_cp_monotone_under_duplication(body):
     """Appending a copy of the body never shortens the critical path."""
     k1 = tx2_kernel(body)
@@ -181,8 +182,9 @@ def test_property_cp_monotone_under_duplication(body):
     assert cp2 >= cp1 - 1e-9
 
 
-@settings(max_examples=40, deadline=None)
-@given(random_fp_kernel(), st.integers(1, 4))
+@pytest.mark.parametrize("body,reps",
+                         [(b, r) for b, r in zip(fp_kernel_cases(40, seed=4),
+                                                 [1, 2, 3, 4] * 10)])
 def test_property_tp_scales_linearly(body, reps):
     k1 = tx2_kernel(body)
     kn = tx2_kernel("\n".join([body] * reps))
@@ -191,8 +193,7 @@ def test_property_tp_scales_linearly(body, reps):
     assert tpn == pytest.approx(reps * tp1)
 
 
-@settings(max_examples=40, deadline=None)
-@given(random_fp_kernel())
+@pytest.mark.parametrize("body", fp_kernel_cases(40, seed=5))
 def test_property_lcd_chain_members_form_cycle(body):
     """Every reported chain's members must read a value produced by the
     previous chain member (in cyclic order)."""

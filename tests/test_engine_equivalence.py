@@ -1,0 +1,183 @@
+"""Differential tests: batched array engine vs. retained reference engine.
+
+The single-sweep LCD, shared-DAG CP, and memoized lookup must be *bit-identical*
+to the seed implementation (kept in ``repro.core.analysis.reference``) on
+randomized synthetic kernels mixing FP arithmetic, loads, plain and
+writeback stores, and pointer bumps — plus a regression pin of the Table I
+numbers on all three paper architectures.
+"""
+
+import random
+import warnings
+
+import pytest
+
+from repro.core import analyze_kernel, analyze_kernels
+from repro.core.analysis import clear_analysis_cache
+from repro.core.analysis.critical_path import critical_path
+from repro.core.analysis.lcd import loop_carried_dependencies
+from repro.core.analysis.reference import (reference_critical_path,
+                                           reference_loop_carried_dependencies)
+from repro.core.isa import parse_aarch64, parse_x86
+from repro.core.machine import cascade_lake, thunderx2, zen
+from repro.core.machine.model import DBEntry, MachineModel
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM
+
+
+def random_mixed_kernel(rng: random.Random) -> str:
+    """Random TX2 kernel with loads, stores, writeback, and pointer bumps."""
+    n = rng.randint(3, 24)
+    lines = []
+    for _ in range(n):
+        roll = rng.random()
+        d, a, b = rng.randint(0, 5), rng.randint(0, 5), rng.randint(0, 5)
+        x = rng.randint(1, 4)
+        if roll < 0.45:
+            op = rng.choice(["fadd", "fmul"])
+            lines.append(f"{op} d{d}, d{a}, d{b}")
+        elif roll < 0.6:
+            lines.append(f"ldr d{d}, [x{x}, {8 * rng.randint(0, 7)}]")
+        elif roll < 0.7:
+            lines.append(f"ldr d{d}, [x{x}], 8")  # post-index writeback load
+        elif roll < 0.8:
+            lines.append(f"str d{a}, [x{x}, {8 * rng.randint(0, 7)}]")
+        elif roll < 0.9:
+            lines.append(f"str d{a}, [x{x}], 8")  # post-index writeback store
+        else:
+            lines.append(f"add x{x}, x{x}, 8")
+    return "\n".join(lines)
+
+
+def mixed_kernel_cases(count: int = 80, seed: int = 7):
+    rng = random.Random(seed)
+    return [random_mixed_kernel(rng) for _ in range(count)]
+
+
+def tx2_kernel(body: str):
+    return parse_aarch64(f"# OSACA-BEGIN\n{body}\n# OSACA-END")
+
+
+def assert_lcd_equal(got, want, body):
+    assert got.longest == want.longest, body
+    assert got.on_longest == want.on_longest, body
+    assert len(got.chains) == len(want.chains), body
+    for g, w in zip(got.chains, want.chains):
+        assert g.length == w.length, body
+        assert g.instr_indices == w.instr_indices, body
+        assert g.carried_by == w.carried_by, body
+
+
+@pytest.mark.parametrize("body", mixed_kernel_cases(80))
+def test_batched_engine_matches_reference(body):
+    kernel = tx2_kernel(body)
+    model = thunderx2()
+
+    ref_cp = reference_critical_path(kernel, model)
+    ref_lcd = reference_loop_carried_dependencies(kernel, model)
+
+    # Standalone entry points (own DAG builds).
+    cp = critical_path(kernel, model)
+    lcd = loop_carried_dependencies(kernel, model)
+    assert cp.length == ref_cp.length, body
+    assert cp.on_path == ref_cp.on_path, body
+    assert [n.nid for n in cp.path] == [n.nid for n in ref_cp.path], body
+    assert_lcd_equal(lcd, ref_lcd, body)
+
+    # Shared single-DAG pipeline (dual-writeback views).
+    a = analyze_kernel(kernel, model)
+    assert a.cp.length == ref_cp.length, body
+    assert a.cp.on_path == ref_cp.on_path, body
+    assert_lcd_equal(a.lcd, ref_lcd, body)
+
+
+@pytest.mark.parametrize("body", mixed_kernel_cases(20, seed=11))
+def test_flags_and_store_forwarding_dag_builds(body):
+    """The beyond-paper DAG options still build and stay forward-only."""
+    from repro.core.analysis import build_dag
+
+    kernel = tx2_kernel(body + "\nsubs x1, x1, 1\nbne .L0")
+    dag = build_dag(kernel, thunderx2(), copies=2, model_flags=True,
+                    model_store_forwarding=True)
+    for src, succs in enumerate(dag.succs):
+        for dst in succs:
+            assert dst > src
+
+
+# -- Table I regression pins (seed-engine values, all three arches) -----------
+
+SEED_TABLE1 = {
+    "tx2": (2.4583333333333335, 18.0, 25.0),
+    "csx": (2.1875, 14.0, 18.0),
+    "zen": (2.0, 11.5, 15.0),
+}
+
+
+@pytest.mark.parametrize("arch,asm,parse,model_fn", [
+    ("tx2", GS_TX2_ASM, parse_aarch64, thunderx2),
+    ("csx", GS_CLX_ASM, parse_x86, cascade_lake),
+    ("zen", GS_ZEN_ASM, parse_x86, zen),
+])
+def test_table1_pinned_to_seed_engine(arch, asm, parse, model_fn):
+    a = analyze_kernel(parse(asm, name="gauss-seidel"), model_fn(), unroll=4)
+    tp, lcd, cp = SEED_TABLE1[arch]
+    assert a.tp_per_it == tp
+    assert a.lcd_per_it == lcd
+    assert a.cp_per_it == cp
+
+
+# -- batch API + caches -------------------------------------------------------
+
+
+def test_analyze_kernels_batch_and_cache():
+    clear_analysis_cache()
+    model = thunderx2()
+    k1 = tx2_kernel("fadd d0, d0, d1")
+    k2 = tx2_kernel("fmul d2, d2, d3\nfadd d4, d2, d2")
+    first = analyze_kernels([k1, k2, k1], model, unroll=2)
+    assert first[0] is first[2]  # same text -> same cached Analysis
+    assert first[0].lcd.longest == 6.0
+    assert first[1].lcd.longest == 6.0
+    # A re-parse of identical text still hits the cache.
+    again = analyze_kernels([tx2_kernel("fadd d0, d0, d1")], model, unroll=2)
+    assert again[0] is first[0]
+    # Different unroll is a different key.
+    other = analyze_kernels([k1], model, unroll=4)
+    assert other[0] is not first[0]
+    clear_analysis_cache()
+
+
+def test_analyze_kernels_matches_analyze_kernel():
+    clear_analysis_cache()
+    model = thunderx2()
+    kernels = [tx2_kernel(b) for b in mixed_kernel_cases(6, seed=13)]
+    batch = analyze_kernels(kernels, model, unroll=1)
+    for kernel, a in zip(kernels, batch):
+        single = analyze_kernel(kernel, model, unroll=1)
+        assert a.tp.block_throughput == single.tp.block_throughput
+        assert a.cp.length == single.cp.length
+        assert a.lcd.longest == single.lcd.longest
+
+
+def test_lookup_warns_once_per_unknown_form():
+    model = MachineModel(
+        name="warn-once-test", isa="aarch64", ports=("P0",),
+        db={}, load_entry=DBEntry(latency=1.0, pressure={"P0": 1.0}),
+        store_entry=DBEntry(latency=1.0, pressure={"P0": 1.0}),
+    )
+    kernel = tx2_kernel("fadd d0, d1, d2\nfadd d3, d4, d5\nfmul d6, d7, d0")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        model.resolve_kernel(kernel)
+        model.resolve_kernel(kernel)
+    messages = [str(w.message) for w in caught]
+    # Two distinct unknown forms -> exactly two warnings across both passes.
+    assert len([m for m in messages if "fadd:fff" in m]) == 1
+    assert len([m for m in messages if "fmul:fff" in m]) == 1
+
+
+def test_lookup_memoization_reuses_parts():
+    model = thunderx2()
+    kernel = tx2_kernel("fadd d0, d1, d2\nfadd d3, d4, d5")
+    c1, c2 = model.resolve_kernel(kernel)
+    assert c1.entry is c2.entry  # memoized DB parts are shared
+    assert c1.form is not c2.form  # per-instruction identity preserved

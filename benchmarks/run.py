@@ -5,6 +5,7 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   table2_tx2_detail    — paper Table II: TX2 port pressures
   analyzer_throughput  — analysis cost per instruction form (tool perf)
   analyzer_scaling     — analysis cost growth on 32/128/512-instr kernels
+  analysis_service     — serving-path req/s + cache hit rate on a hot trace
   ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
   hlo_roofline         — HLO parse + three-term roofline on a compiled step
   train_step_tiny      — end-to-end tiny train step wall time
@@ -122,6 +123,41 @@ def analyzer_scaling() -> None:
          f"subquadratic={subquadratic}")
 
 
+def analysis_service() -> None:
+    """Serving-path throughput: a synthetic hot-loop trace (many repeated
+    requests over a few kernels, the analysis-in-a-tuning-loop shape) pushed
+    through ``AnalysisService.submit_batch``.  ``derived`` reports req/s and
+    the cache hit rate — the amortization the service exists for."""
+    import random
+
+    from repro.core.registry import get_arch
+    from repro.serving.analysis import AnalysisRequest, AnalysisService
+
+    tx2, csx, zen = get_arch("tx2"), get_arch("csx"), get_arch("zen")
+    pool = [
+        AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=4, name="gs-tx2"),
+        AnalysisRequest(asm=csx.sample_asm, arch="csx", unroll=4, name="gs-csx"),
+        AnalysisRequest(asm=zen.sample_asm, arch="zen", unroll=4, name="gs-zen"),
+        AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=1, name="gs-tx2-1x"),
+    ]
+    rng = random.Random(0)
+    trace = [pool[rng.randrange(len(pool))] for _ in range(256)]
+
+    service = AnalysisService()
+    t0 = time.perf_counter()
+    responses = []
+    for start in range(0, len(trace), 16):
+        responses.extend(service.submit_batch(trace[start:start + 16]))
+    dt = time.perf_counter() - t0
+
+    assert all(r.ok for r in responses)
+    hits, misses = service.stats["hits"], service.stats["misses"]
+    hit_rate = hits / max(hits + misses, 1)
+    _row("analysis_service", dt * 1e6 / len(trace),
+         f"req_per_s={len(trace) / dt:.0f};hit_rate={hit_rate:.3f};"
+         f"requests={len(trace)};hits={hits};misses={misses}")
+
+
 def ibench_pipeline() -> None:
     import jax.numpy as jnp
     from repro.core.bench import populate_entry
@@ -211,6 +247,7 @@ def main() -> None:
     table2_tx2_detail()
     analyzer_throughput()
     analyzer_scaling()
+    analysis_service()
     ibench_pipeline()
     hlo_roofline()
     train_step_tiny()

@@ -3,6 +3,11 @@
 Usage:
   PYTHONPATH=src python examples/analyze_kernel.py <file.s> --arch tx2 [--unroll 4]
 
+``--arch`` accepts any id or alias from the architecture registry
+(``tx2``/``csx``/``zen``/``zen2``/``n1``, ``cascadelake``, ``graviton2``, …);
+``--format json`` emits the stable ``AnalysisReport`` schema instead of the
+Table-II text report.
+
 Markers: wrap the loop body in ``# OSACA-BEGIN`` / ``# OSACA-END`` comments,
 use IACA byte markers, or let the tool auto-detect the innermost loop.
 Without a file argument, analyzes the built-in Gauss-Seidel kernels.
@@ -10,32 +15,41 @@ Without a file argument, analyzes the built-in Gauss-Seidel kernels.
 
 import argparse
 
-from repro.core import (analyze_kernel, cascade_lake, parse_aarch64, parse_x86,
-                        thunderx2, zen)
-from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM
-
-MODELS = {"tx2": thunderx2, "csx": cascade_lake, "zen": zen}
-BUILTIN = {"tx2": GS_TX2_ASM, "csx": GS_CLX_ASM, "zen": GS_ZEN_ASM}
+from repro.api import analyze, asm_arch_ids, get_arch
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("file", nargs="?", default=None)
-    ap.add_argument("--arch", default="tx2", choices=sorted(MODELS))
+    ap.add_argument("--arch", default="tx2",
+                    help=f"architecture id or alias; ids: "
+                         f"{', '.join(asm_arch_ids())}")
     ap.add_argument("--unroll", type=int, default=4)
+    ap.add_argument("--format", default="text",
+                    choices=("text", "json", "markdown"))
     args = ap.parse_args()
 
-    model = MODELS[args.arch]()
-    asm = open(args.file).read() if args.file else BUILTIN[args.arch]
-    parse = parse_aarch64 if model.isa == "aarch64" else parse_x86
-    kernel = parse(asm, name=args.file or "gauss-seidel")
-    analysis = analyze_kernel(kernel, model, unroll=args.unroll)
-    print(analysis.report())
-    bracket = analysis.prediction_bracket()
+    try:
+        spec = get_arch(args.arch)
+    except ValueError as exc:
+        ap.error(str(exc))
+    if args.file:
+        with open(args.file) as f:
+            asm = f.read()
+        name = args.file
+    else:
+        if spec.sample_asm is None:
+            ap.error(f"arch '{spec.id}' has no built-in kernel; pass a file")
+        asm, name = spec.sample_asm, "gauss-seidel"
+
+    report = analyze(asm, arch=spec.id, unroll=args.unroll, name=name)
+    print(report.render(args.format))
+    if args.format != "text" or report.kind != "asm":
+        return  # HLO reports are already in seconds; no cycle→ns footer
     print()
-    ghz = model.frequency_ghz
-    for name, cy in bracket.items():
-        print(f"{name:>16}: {cy:7.2f} cy/it = {cy / ghz:7.2f} ns/it @ {ghz} GHz")
+    ghz = report.frequency_ghz
+    for key, cy in report.prediction_bracket().items():
+        print(f"{key:>16}: {cy:7.2f} cy/it = {cy / ghz:7.2f} ns/it @ {ghz} GHz")
 
 
 if __name__ == "__main__":

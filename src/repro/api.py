@@ -1,0 +1,164 @@
+"""One front door for kernel analysis: ``from repro.api import analyze``.
+
+The facade accepts raw assembly text, a ``.s`` file path, a parsed
+:class:`~repro.core.isa.instruction.Kernel`, or an XLA HLO module (text,
+parsed, or a ``jax.stages.Compiled``) through the *same* call; the target is
+named by an architecture id or alias resolved through the central registry
+(:mod:`repro.core.registry`), and the result is always a serializable
+:class:`~repro.core.analysis.report.AnalysisReport`::
+
+    from repro.api import analyze
+
+    report = analyze("fadd d0, d0, d1", arch="tx2")     # asm text
+    report = analyze("loop.s", arch="cascadelake")      # file path + alias
+    report = analyze(hlo_module, arch="tpu-v5e")        # XLA HLO module
+    print(report.render("text"))                        # or "json"/"markdown"
+    payload = report.to_dict()                          # stable JSON schema
+
+Analyses share the process-level LRU and one warm :class:`MachineModel` per
+architecture, so hot loops repeated across calls are analyzed once.  For
+request/response serving (batching, per-request error envelopes), use
+:class:`repro.serving.analysis.AnalysisService` — it is built on this facade.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Union
+
+from repro.core.analysis import Analysis, AnalysisReport, analyze_kernels
+from repro.core.isa.instruction import Kernel
+from repro.core.registry import (ArchSpec, asm_arch_ids, get_arch,
+                                 list_arch_ids, register_arch)
+
+__all__ = [
+    "analyze",
+    "analyze_raw",
+    "AnalysisReport",
+    "ArchSpec",
+    "get_arch",
+    "register_arch",
+    "list_arch_ids",
+    "asm_arch_ids",
+    "AnalysisService",
+    "AnalysisRequest",
+    "AnalysisResponse",
+]
+
+# One warm model per architecture for the process lifetime: its instruction-
+# lookup memo then amortizes across every analyze() call.
+_MODELS: Dict[str, object] = {}
+
+_ASM_SUFFIXES = (".s", ".asm")
+# Suffixes that mark a single-line string source as a file path.  An
+# existence probe alone would be cwd-dependent: a one-line kernel text that
+# happens to collide with a local filename must not silently become a read.
+_PATH_SUFFIXES = _ASM_SUFFIXES + (".hlo", ".txt", ".dump")
+
+
+def model_for(arch: Union[str, ArchSpec]):
+    """The process-wide warm machine model (or TPU chip) for ``arch``."""
+    spec = arch if isinstance(arch, ArchSpec) else get_arch(arch)
+    model = _MODELS.get(spec.id)
+    if model is None:
+        model = spec.model_factory()
+        _MODELS[spec.id] = model
+    return model
+
+
+def _looks_like_path(text: str) -> bool:
+    if "\n" in text:
+        return False
+    if text.strip().lower().endswith(_PATH_SUFFIXES):
+        return True
+    # Anything else must both contain a path separator and exist: plain
+    # one-line instruction text never does, regardless of the caller's cwd.
+    return os.sep in text and os.path.isfile(text)
+
+
+def _read_if_path(source):
+    """Read path-like sources into (text, basename); pass others through."""
+    if isinstance(source, os.PathLike) or (
+            isinstance(source, str) and _looks_like_path(source)):
+        path = os.fspath(source)
+        with open(path) as f:
+            return f.read(), os.path.basename(path)
+    return source, None
+
+
+def _looks_like_hlo(source) -> bool:
+    if hasattr(source, "computations") or hasattr(source, "as_text"):
+        return True
+    return isinstance(source, str) and source.lstrip().startswith("HloModule")
+
+
+def _coerce_kernel(source, spec: ArchSpec, name: Optional[str]) -> Kernel:
+    if isinstance(source, Kernel):
+        if name is not None and source.name != name:
+            from dataclasses import replace
+            return replace(source, name=name)
+        return source
+    source, basename = _read_if_path(source)
+    if basename is not None:
+        return spec.parser(source, name=name or basename)
+    if isinstance(source, (str, bytes)):
+        text = source.decode() if isinstance(source, bytes) else source
+        return spec.parser(text, name=name or "kernel")
+    raise TypeError(
+        f"cannot analyze {type(source).__name__}: expected asm text, a "
+        f"{'/'.join(_ASM_SUFFIXES)} file path, a parsed Kernel, or an HLO "
+        f"module")
+
+
+def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
+                name: Optional[str] = None) -> Analysis:
+    """Like :func:`analyze` but returning the live assembly-pipeline
+    :class:`Analysis` (kernel/model objects attached).  Asm targets only."""
+    spec = get_arch(arch)
+    if spec.is_hlo:
+        raise ValueError(
+            f"arch '{spec.id}' is an HLO target; use analyze() for the "
+            f"serializable report")
+    if unroll < 1:
+        raise ValueError(f"unroll must be >= 1, got {unroll}")
+    kernel = _coerce_kernel(source, spec, name)
+    return analyze_kernels([kernel], model_for(spec), unroll=unroll)[0]
+
+
+def analyze(source, arch: str = "tx2", unroll: int = 1,
+            name: Optional[str] = None) -> AnalysisReport:
+    """Analyze a kernel and return the serializable :class:`AnalysisReport`.
+
+    ``source`` may be assembly text, a ``.s``/``.asm`` file path, a parsed
+    ``Kernel``, or an HLO module (text starting with ``HloModule``, a parsed
+    ``HLOModule``, or a ``Compiled``).  HLO sources are auto-routed to the
+    HLO pipeline even when ``arch`` names an asm target's default.
+    """
+    spec = get_arch(arch)
+    # Read path sources up front so the HLO sniff sees file *contents*, not
+    # the path string (an .hlo file must auto-route even under an asm arch).
+    source, basename = _read_if_path(source)
+    if basename is not None:
+        name = name or basename
+    if spec.is_hlo and not _looks_like_hlo(source):
+        got = (f"text starting {source.strip()[:40]!r}"
+               if isinstance(source, str) else type(source).__name__)
+        raise ValueError(
+            f"arch '{spec.id}' expects an HLO module (text starting with "
+            f"'HloModule', a parsed HLOModule, a Compiled, or a file path); "
+            f"got {got}")
+    if spec.is_hlo or _looks_like_hlo(source):
+        chip = model_for(spec) if spec.is_hlo else None
+        hlo_arch = spec.id if spec.is_hlo else "tpu-v5e"
+        return AnalysisReport.from_hlo(source, chip=chip, arch=hlo_arch,
+                                       name=name)
+    return analyze_raw(source, arch=arch, unroll=unroll, name=name).to_report()
+
+
+def __getattr__(attr):
+    # Service classes are exposed lazily: ``repro.serving`` pulls in the jax
+    # token engine, which plain analyze() callers should not pay for.
+    if attr in ("AnalysisService", "AnalysisRequest", "AnalysisResponse"):
+        from repro.serving import analysis as _serving
+        return getattr(_serving, attr)
+    raise AttributeError(f"module 'repro.api' has no attribute '{attr}'")

@@ -2,9 +2,13 @@
 analysis, for x86 + AArch64 assembly (faithful reproduction) and for XLA HLO
 on TPU meshes (the framework-integrated adaptation, ``repro.core.hlo``)."""
 
-from repro.core.analysis import analyze_kernel, analyze_kernels
+from repro.core.analysis import (AnalysisReport, analyze_kernel,
+                                 analyze_kernels)
 from repro.core.isa import parse_aarch64, parse_x86
 from repro.core.machine import cascade_lake, thunderx2, zen
+from repro.core.registry import (ArchSpec, asm_arch_ids, get_arch,
+                                 list_arch_ids, register_arch)
 
-__all__ = ["analyze_kernel", "analyze_kernels", "parse_aarch64", "parse_x86",
-           "cascade_lake", "thunderx2", "zen"]
+__all__ = ["AnalysisReport", "ArchSpec", "analyze_kernel", "analyze_kernels",
+           "asm_arch_ids", "cascade_lake", "get_arch", "list_arch_ids",
+           "parse_aarch64", "parse_x86", "register_arch", "thunderx2", "zen"]

@@ -7,12 +7,22 @@ from repro.core.analysis.critical_path import (CriticalPathResult,
                                                critical_path_from_dag)
 from repro.core.analysis.lcd import (LCDResult, lcd_from_dag,
                                      loop_carried_dependencies)
-from repro.core.analysis.analyze import (Analysis, analyze_kernel,
-                                         analyze_kernels,
+from repro.core.analysis.analyze import (Analysis, analysis_view,
+                                         analyze_kernel, analyze_kernels,
                                          clear_analysis_cache)
+from repro.core.analysis.report import (AnalysisReport, InstructionRow,
+                                        LCDChainRow, SCHEMA_VERSION)
+from repro.core.analysis.render import register_renderer, render
 
 __all__ = [
     "Analysis",
+    "AnalysisReport",
+    "InstructionRow",
+    "LCDChainRow",
+    "SCHEMA_VERSION",
+    "analysis_view",
+    "register_renderer",
+    "render",
     "CriticalPathResult",
     "DependencyDAG",
     "LCDResult",

@@ -14,13 +14,14 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Iterable, List
 
 from repro.core.analysis.critical_path import (CriticalPathResult,
                                                critical_path_from_dag)
 from repro.core.analysis.dag import build_dag
 from repro.core.analysis.lcd import LCDResult, lcd_from_dag
+from repro.core.analysis.report import AnalysisReport
 from repro.core.analysis.throughput import (ThroughputResult,
                                             throughput_from_costs)
 from repro.core.isa.instruction import Kernel
@@ -57,43 +58,18 @@ class Analysis:
             "upper_bound_cp": self.cp_per_it,
         }
 
+    def to_report(self) -> "AnalysisReport":
+        """Snapshot into the serializable public-API report (memoized: on a
+        serving path the same cached analysis is reported many times)."""
+        report = self.__dict__.get("_report_memo")
+        if report is None:
+            report = AnalysisReport.from_analysis(self)
+            self.__dict__["_report_memo"] = report
+        return report
+
     def report(self) -> str:
         """Render a condensed Table-II-style report."""
-        shown_ports = [p for p in self.model.ports
-                       if self.tp.port_pressure.get(p, 0.0) > 0.0]
-        head = " ".join(f"{p:>5}" for p in shown_ports)
-        lines: List[str] = []
-        lines.append(f"OSACA analysis  kernel={self.kernel.name}  "
-                     f"arch={self.model.name}  unroll={self.unroll}x")
-        lines.append(f"{head} | {'LCD':>5} {'CP':>5} | {'LN':>4} | assembly")
-        lines.append("-" * (len(head) + 32))
-        for idx, (cost, pressure) in enumerate(self.tp.per_instruction):
-            cells = " ".join(
-                f"{pressure.get(p, 0.0):5.2f}" if pressure.get(p, 0.0) else "     "
-                for p in shown_ports
-            )
-            lat = cost.entry.latency
-            lcd_mark = f"{lat:5.1f}" if idx in self.lcd.on_longest else "     "
-            cp_mark = f"{lat:5.1f}" if idx in self.cp.on_path else "     "
-            ln = cost.form.line_number
-            lines.append(f"{cells} | {lcd_mark} {cp_mark} | {ln:>4} | "
-                         f"{cost.form.raw.strip()}")
-        lines.append("-" * (len(head) + 32))
-        totals = " ".join(f"{self.tp.port_pressure.get(p, 0.0):5.2f}" for p in shown_ports)
-        lines.append(f"{totals} | {self.lcd.longest:5.1f} {self.cp.length:5.1f} | "
-                     f"(per {self.unroll}x-unrolled block)")
-        per_it = " ".join(
-            f"{self.tp.port_pressure.get(p, 0.0) / self.unroll:5.2f}" for p in shown_ports
-        )
-        lines.append(f"{per_it} | {self.lcd_per_it:5.1f} {self.cp_per_it:5.1f} | "
-                     f"per high-level iteration")
-        lines.append("")
-        lines.append(f"TP  (lower bound): {self.tp_per_it:6.2f} cy/it   "
-                     f"bottleneck port {self.tp.bottleneck_port}")
-        lines.append(f"LCD (expected)  : {self.lcd_per_it:6.2f} cy/it   "
-                     f"{len(self.lcd.chains)} cyclic chain(s) found")
-        lines.append(f"CP  (upper bound): {self.cp_per_it:6.2f} cy/it")
-        return "\n".join(lines)
+        return self.to_report().render("text")
 
 
 def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1) -> Analysis:
@@ -153,6 +129,17 @@ class LRUCache:
 _cache = LRUCache(512)
 
 
+def _mem_sig(refs) -> str:
+    # Address-register structure of load/store operands: build_dag derives
+    # address dependencies and writeback defs from these, so they are part
+    # of a form's analysis identity.
+    return ";".join(
+        f"{ref.base.name if ref.base else ''}+"
+        f"{ref.index.name if ref.index else ''}*{ref.scale}+{ref.offset}"
+        f":{int(ref.post_index)}{int(ref.pre_index)}"
+        for ref in refs)
+
+
 def _form_text(form) -> str:
     # Parsed kernels carry the assembly text; programmatically built forms
     # (empty ``raw``) need a descriptor covering everything the analyses
@@ -162,7 +149,8 @@ def _form_text(form) -> str:
     return (f"{form.mnemonic}:{form.operand_signature()}"
             f":{','.join(form.source_registers)}"
             f">{','.join(form.dest_registers)}"
-            f":{int(form.is_branch)}{int(form.is_dep_breaking)}")
+            f":{int(form.is_branch)}{int(form.is_dep_breaking)}"
+            f"|L{_mem_sig(form.loads)}|S{_mem_sig(form.stores)}")
 
 
 def _cache_key(kernel: Kernel, model: MachineModel, unroll: int) -> tuple:
@@ -189,11 +177,11 @@ def analyze_kernels(
     instruction-DB probing cost once per distinct instruction form, not once
     per occurrence.
 
-    Caveats of cache identity: machine models are assumed immutable after
+    Cache-identity caveat: machine models are assumed immutable after
     construction and distinguished by ``model.name`` (mutating a model's DB
-    in place after analyses have been cached serves stale results), and a
-    cache hit returns the first requester's ``Analysis`` object — including
-    its ``kernel.name`` — for all textually identical kernels.
+    in place after analyses have been cached serves stale results).  A cache
+    hit returns a per-request *view* carrying the requester's ``kernel.name``
+    (the underlying TP/CP/LCD results are shared).
     """
     out: List[Analysis] = []
     for kernel in kernels:
@@ -203,9 +191,23 @@ def analyze_kernels(
         key = _cache_key(kernel, model, unroll)
         hit = _cache.get(key)
         if hit is not None:
-            out.append(hit)
+            out.append(analysis_view(hit, kernel.name))
             continue
         analysis = analyze_kernel(kernel, model, unroll=unroll)
         _cache.put(key, analysis)
         out.append(analysis)
     return out
+
+
+def analysis_view(analysis: Analysis, name: str) -> Analysis:
+    """A shallow per-request view of a shared ``Analysis`` whose kernel
+    carries the requester's name (results objects are shared, not copied)."""
+    if analysis.kernel.name == name:
+        return analysis
+    view = replace(analysis, kernel=replace(analysis.kernel, name=name))
+    memo = analysis.__dict__.get("_report_memo")
+    if memo is not None:
+        # Stamp the shared report snapshot with the requester's name: rows
+        # and chains are immutable tuples, so the view costs O(1).
+        view.__dict__["_report_memo"] = replace(memo, kernel_name=name)
+    return view

@@ -1,0 +1,147 @@
+"""Pluggable renderers for :class:`~repro.core.analysis.report.AnalysisReport`.
+
+Built-ins: ``text`` (the condensed Table-II-style report, byte-identical to
+the legacy ``Analysis.report()`` output for assembly kernels), ``json`` (the
+stable ``to_dict`` schema), and ``markdown``.  Register additional formats
+with :func:`register_renderer`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+RENDERERS: Dict[str, Callable] = {}
+
+
+def register_renderer(name: str, fn: Callable) -> None:
+    RENDERERS[name] = fn
+
+
+def render(report, fmt: str = "text") -> str:
+    try:
+        renderer = RENDERERS[fmt]
+    except KeyError:
+        raise ValueError(
+            f"unknown report format '{fmt}'; known: {sorted(RENDERERS)}"
+        ) from None
+    return renderer(report)
+
+
+# ---------------------------------------------------------------------------
+# text
+# ---------------------------------------------------------------------------
+
+
+def _shown_ports(report) -> List[str]:
+    return [p for p in report.ports if report.port_pressure.get(p, 0.0) > 0.0]
+
+
+def _text_asm(report) -> str:
+    shown_ports = _shown_ports(report)
+    head = " ".join(f"{p:>5}" for p in shown_ports)
+    lines: List[str] = []
+    lines.append(f"OSACA analysis  kernel={report.kernel_name}  "
+                 f"arch={report.arch}  unroll={report.unroll}x")
+    lines.append(f"{head} | {'LCD':>5} {'CP':>5} | {'LN':>4} | assembly")
+    lines.append("-" * (len(head) + 32))
+    for row in report.rows:
+        cells = " ".join(
+            f"{row.port_pressure.get(p, 0.0):5.2f}"
+            if row.port_pressure.get(p, 0.0) else "     "
+            for p in shown_ports
+        )
+        lcd_mark = f"{row.latency:5.1f}" if row.on_lcd else "     "
+        cp_mark = f"{row.latency:5.1f}" if row.on_critical_path else "     "
+        lines.append(f"{cells} | {lcd_mark} {cp_mark} | {row.line_number:>4} | "
+                     f"{row.asm}")
+    lines.append("-" * (len(head) + 32))
+    totals = " ".join(f"{report.port_pressure.get(p, 0.0):5.2f}"
+                      for p in shown_ports)
+    lines.append(f"{totals} | {report.lcd_block:5.1f} {report.cp_block:5.1f} | "
+                 f"(per {report.unroll}x-unrolled block)")
+    per_it = " ".join(
+        f"{report.port_pressure.get(p, 0.0) / report.unroll:5.2f}"
+        for p in shown_ports
+    )
+    lines.append(f"{per_it} | {report.lcd_per_it:5.1f} {report.cp_per_it:5.1f} | "
+                 f"per high-level iteration")
+    lines.append("")
+    lines.append(f"TP  (lower bound): {report.tp_per_it:6.2f} cy/it   "
+                 f"bottleneck port {report.bottleneck_port}")
+    lines.append(f"LCD (expected)  : {report.lcd_per_it:6.2f} cy/it   "
+                 f"{len(report.lcd_chains)} cyclic chain(s) found")
+    lines.append(f"CP  (upper bound): {report.cp_per_it:6.2f} cy/it")
+    return "\n".join(lines)
+
+
+def _text_hlo(report) -> str:
+    lines: List[str] = []
+    lines.append(f"OSACA analysis  module={report.kernel_name}  "
+                 f"arch={report.arch}  (HLO)")
+    lines.append("engine pressure (roofline terms):")
+    for port in report.ports:
+        lines.append(f"  {port:>4}: {report.port_pressure.get(port, 0.0) * 1e3:9.4f} ms")
+    lines.append(f"critical path ({len(report.rows)} ops):")
+    for row in sorted(report.rows, key=lambda r: -r.latency)[:8]:
+        lcd_mark = " LCD" if row.on_lcd else "    "
+        lines.append(f"  {row.latency * 1e3:9.4f} ms{lcd_mark}  "
+                     f"{row.mnemonic:<22} {row.asm}")
+    lines.append("")
+    lines.append(f"TP  (roofline bound): {report.tp_block * 1e3:9.4f} ms/step  "
+                 f"bottleneck engine {report.bottleneck_port}")
+    lines.append(f"LCD (expected)     : {report.lcd_block * 1e3:9.4f} ms/step  "
+                 f"{len(report.lcd_chains)} carried chain(s) found")
+    lines.append(f"CP  (upper bound)  : {report.cp_block * 1e3:9.4f} ms/step")
+    return "\n".join(lines)
+
+
+def render_text(report) -> str:
+    return _text_hlo(report) if report.kind == "hlo" else _text_asm(report)
+
+
+# ---------------------------------------------------------------------------
+# json / markdown
+# ---------------------------------------------------------------------------
+
+
+def render_json(report) -> str:
+    return report.to_json(indent=2, sort_keys=True)
+
+
+def render_markdown(report) -> str:
+    unit = "ms" if report.kind == "hlo" else "cy"
+    scale = 1e3 if report.kind == "hlo" else 1.0
+    shown_ports = _shown_ports(report)
+    lines: List[str] = []
+    lines.append(f"### OSACA analysis — `{report.kernel_name}` on "
+                 f"`{report.arch}` (unroll {report.unroll}x)")
+    lines.append("")
+    lines.append("| # | " + " | ".join(shown_ports) +
+                 " | LCD | CP | assembly |")
+    lines.append("|---|" + "---|" * (len(shown_ports) + 3))
+    for row in report.rows:
+        cells = " | ".join(
+            f"{row.port_pressure.get(p, 0.0):.2f}"
+            if row.port_pressure.get(p, 0.0) else ""
+            for p in shown_ports
+        )
+        lcd = f"{row.latency * scale:.1f}" if row.on_lcd else ""
+        cp = f"{row.latency * scale:.1f}" if row.on_critical_path else ""
+        lines.append(f"| {row.index} | {cells} | {lcd} | {cp} | "
+                     f"`{row.asm}` |")
+    lines.append("")
+    bracket = report.prediction_bracket()
+    lines.append(f"- **TP** (lower bound): "
+                 f"{bracket['lower_bound_tp'] * scale:.2f} {unit}/it — "
+                 f"bottleneck `{report.bottleneck_port}`")
+    lines.append(f"- **LCD** (expected): "
+                 f"{bracket['expected_lcd'] * scale:.2f} {unit}/it — "
+                 f"{len(report.lcd_chains)} cyclic chain(s)")
+    lines.append(f"- **CP** (upper bound): "
+                 f"{bracket['upper_bound_cp'] * scale:.2f} {unit}/it")
+    return "\n".join(lines)
+
+
+register_renderer("text", render_text)
+register_renderer("json", render_json)
+register_renderer("markdown", render_markdown)

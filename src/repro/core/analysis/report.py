@@ -1,0 +1,266 @@
+"""Serializable analysis report: the wire format of the public API.
+
+:class:`AnalysisReport` is a plain-data snapshot of one TP/CP/LCD analysis —
+per-instruction rows (port pressure, CP / LCD membership), the per-port
+totals, and the [TP, LCD, CP] prediction bracket — detached from the live
+``Kernel`` / ``MachineModel`` objects so it can round-trip through JSON
+(``to_dict`` / ``from_dict``) and be rendered by any registered renderer
+(``render("text" | "json" | "markdown")``, see ``repro.core.analysis.render``).
+
+Both front-ends produce it: :meth:`AnalysisReport.from_analysis` wraps the
+assembly pipeline's ``Analysis`` (``kind="asm"``, cycles per iteration), and
+:meth:`AnalysisReport.from_hlo` wraps the TPU adaptation (``kind="hlo"``,
+seconds per step) — same schema, same bracket keys, so a downstream tool can
+consume an HLO while-body and an asm loop identically.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: Bracket keys shared by both kinds — the paper's [TP, CP] runtime bracket
+#: with the LCD as the expected value.
+BRACKET_KEYS = ("lower_bound_tp", "expected_lcd", "upper_bound_cp")
+
+
+@dataclass(frozen=True)
+class InstructionRow:
+    """One analyzed instruction (asm) or critical-path op (hlo)."""
+
+    index: int
+    line_number: int
+    asm: str  # raw assembly text / HLO op name
+    mnemonic: str
+    latency: float  # node latency in cycles (asm) or seconds (hlo)
+    port_pressure: Dict[str, float]
+    on_critical_path: bool
+    on_lcd: bool
+
+
+@dataclass(frozen=True)
+class LCDChainRow:
+    """One cyclic loop-carried chain (one period's length)."""
+
+    length: float
+    members: Tuple = ()  # instruction indices (asm) / op names (hlo)
+    carried_by: object = None  # closing instr index (asm) / tuple index (hlo)
+
+
+@dataclass(frozen=True)
+class AnalysisReport:
+    """Typed, JSON-stable result of one kernel analysis."""
+
+    kind: str  # "asm" | "hlo"
+    kernel_name: str
+    arch: str
+    isa: str
+    unroll: int
+    frequency_ghz: float
+    unit: str  # "cy/it" (asm) | "s" (hlo)
+    ports: Tuple[str, ...]
+    rows: Tuple[InstructionRow, ...]
+    port_pressure: Dict[str, float]  # per-block totals, model port order
+    bottleneck_port: str
+    tp_block: float  # per assembly-block / per step
+    cp_block: float
+    lcd_block: float
+    lcd_chains: Tuple[LCDChainRow, ...] = ()
+    schema_version: int = SCHEMA_VERSION
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def tp_per_it(self) -> float:
+        return self.tp_block / self.unroll
+
+    @property
+    def cp_per_it(self) -> float:
+        return self.cp_block / self.unroll
+
+    @property
+    def lcd_per_it(self) -> float:
+        return self.lcd_block / self.unroll
+
+    def prediction_bracket(self) -> Dict[str, float]:
+        """[TP, CP] runtime bracket with the LCD as the expected value."""
+        return {
+            "lower_bound_tp": self.tp_per_it,
+            "expected_lcd": self.lcd_per_it,
+            "upper_bound_cp": self.cp_per_it,
+        }
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> Dict:
+        """Plain-JSON form; ``from_dict(to_dict())`` is bit-identical."""
+        return {
+            "schema_version": self.schema_version,
+            "kind": self.kind,
+            "kernel_name": self.kernel_name,
+            "arch": self.arch,
+            "isa": self.isa,
+            "unroll": self.unroll,
+            "frequency_ghz": self.frequency_ghz,
+            "unit": self.unit,
+            "ports": list(self.ports),
+            "port_pressure": dict(self.port_pressure),
+            "bottleneck_port": self.bottleneck_port,
+            "tp_block": self.tp_block,
+            "cp_block": self.cp_block,
+            "lcd_block": self.lcd_block,
+            "prediction_bracket": self.prediction_bracket(),
+            "rows": [asdict(r) for r in self.rows],
+            "lcd_chains": [
+                {"length": c.length, "members": list(c.members),
+                 "carried_by": c.carried_by}
+                for c in self.lcd_chains
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "AnalysisReport":
+        version = data.get("schema_version", SCHEMA_VERSION)
+        if version > SCHEMA_VERSION:
+            raise ValueError(
+                f"report schema v{version} is newer than supported "
+                f"v{SCHEMA_VERSION}")
+        rows = tuple(
+            InstructionRow(
+                index=r["index"], line_number=r["line_number"], asm=r["asm"],
+                mnemonic=r["mnemonic"], latency=r["latency"],
+                port_pressure=dict(r["port_pressure"]),
+                on_critical_path=r["on_critical_path"], on_lcd=r["on_lcd"],
+            ) for r in data["rows"])
+        chains = tuple(
+            LCDChainRow(length=c["length"], members=tuple(c["members"]),
+                        carried_by=c["carried_by"])
+            for c in data.get("lcd_chains", ()))
+        return cls(
+            kind=data["kind"], kernel_name=data["kernel_name"],
+            arch=data["arch"], isa=data["isa"], unroll=data["unroll"],
+            frequency_ghz=data["frequency_ghz"], unit=data["unit"],
+            ports=tuple(data["ports"]),
+            rows=rows, port_pressure=dict(data["port_pressure"]),
+            bottleneck_port=data["bottleneck_port"],
+            tp_block=data["tp_block"], cp_block=data["cp_block"],
+            lcd_block=data["lcd_block"], lcd_chains=chains,
+            schema_version=version,
+        )
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.to_dict(), **kwargs)
+
+    @classmethod
+    def from_json(cls, text: str) -> "AnalysisReport":
+        return cls.from_dict(json.loads(text))
+
+    def render(self, fmt: str = "text") -> str:
+        from repro.core.analysis.render import render
+        return render(self, fmt)
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_analysis(cls, analysis) -> "AnalysisReport":
+        """Snapshot an assembly-pipeline :class:`Analysis`."""
+        rows = []
+        for idx, (cost, pressure) in enumerate(analysis.tp.per_instruction):
+            rows.append(InstructionRow(
+                index=idx,
+                line_number=cost.form.line_number,
+                asm=cost.form.raw.strip(),
+                mnemonic=cost.form.mnemonic,
+                latency=cost.entry.latency,
+                port_pressure={p: cy for p, cy in pressure.items()},
+                on_critical_path=idx in analysis.cp.on_path,
+                on_lcd=idx in analysis.lcd.on_longest,
+            ))
+        chains = tuple(
+            LCDChainRow(length=c.length, members=tuple(c.instr_indices),
+                        carried_by=c.carried_by)
+            for c in analysis.lcd.chains)
+        model = analysis.model
+        return cls(
+            kind="asm",
+            kernel_name=analysis.kernel.name,
+            arch=model.name,
+            isa=model.isa,
+            unroll=analysis.unroll,
+            frequency_ghz=model.frequency_ghz,
+            unit="cy/it",
+            ports=tuple(model.ports),
+            rows=tuple(rows),
+            port_pressure={p: analysis.tp.port_pressure.get(p, 0.0)
+                           for p in model.ports},
+            bottleneck_port=analysis.tp.bottleneck_port,
+            tp_block=analysis.tp.block_throughput,
+            cp_block=analysis.cp.length,
+            lcd_block=analysis.lcd.longest,
+            lcd_chains=chains,
+        )
+
+    @classmethod
+    def from_hlo(cls, source, chip=None, arch: str = "tpu-v5e",
+                 name: Optional[str] = None) -> "AnalysisReport":
+        """Analyze an HLO module (text, parsed, or Compiled) into the same
+        report shape: roofline bound as TP, longest while-carried chain as
+        LCD, def-use critical path as CP — all in seconds per step."""
+        from repro.core.hlo import (TPU_V5E, hlo_critical_path,
+                                    hlo_loop_carried, parse_hlo)
+        from repro.core.hlo.costs import HLOCostModel
+        from repro.core.hlo.roofline import collective_stats
+
+        chip = chip or TPU_V5E
+        if hasattr(source, "as_text"):
+            source = source.as_text()
+        module = source if hasattr(source, "computations") else parse_hlo(source)
+        if not module.computations or \
+                module.entry_name not in module.computations:
+            raise ValueError(
+                f"not a valid HLO module: no entry computation parsed "
+                f"(module name {module.name!r}) — is the dump truncated?")
+
+        cost = HLOCostModel(module, chip)
+        flops = cost.computation_flops(module.entry_name)
+        hbm_bytes = sum(cost.op_bytes(op, module.entry)
+                        for op in module.entry.ops)
+        stats = collective_stats(module, chip)
+        terms = chip.port_pressure(float(flops), float(hbm_bytes),
+                                   stats.total_bytes)
+        cp = hlo_critical_path(module, chip)
+        lcd = hlo_loop_carried(module, chip)
+
+        longest = lcd.longest
+        lcd_ops = set(longest.ops) if longest is not None else set()
+        rows = tuple(
+            InstructionRow(
+                index=i, line_number=-1, asm=node.op_name,
+                mnemonic=node.opcode, latency=node.seconds, port_pressure={},
+                on_critical_path=True, on_lcd=node.op_name in lcd_ops,
+            ) for i, node in enumerate(cp.path))
+        chains = tuple(
+            LCDChainRow(length=c.total_seconds, members=tuple(c.ops),
+                        carried_by=c.tuple_index)
+            for c in lcd.chains)
+        bottleneck = max(terms, key=lambda k: terms[k]) if terms else ""
+        return cls(
+            kind="hlo",
+            kernel_name=name or module.name,
+            arch=arch,
+            isa="hlo",
+            unroll=1,
+            frequency_ghz=0.0,
+            unit="s",
+            ports=tuple(terms),
+            rows=rows,
+            port_pressure=dict(terms),
+            bottleneck_port=bottleneck,
+            tp_block=terms.get(bottleneck, 0.0),
+            cp_block=cp.seconds,
+            lcd_block=longest.total_seconds if longest is not None else 0.0,
+            lcd_chains=chains,
+        )

@@ -116,6 +116,11 @@ class MachineModel:
         parts = self._lookup_cache.get(cache_key)
         if parts is None:
             parts = self._lookup_parts(form, sig)
+            # Crude bound for long-lived serving processes fed caller-
+            # controlled asm: distinct unknown forms must not grow the memo
+            # (and the warn-once set below) without limit.
+            if len(self._lookup_cache) >= 1 << 16:
+                self._lookup_cache.clear()
             self._lookup_cache[cache_key] = parts
         entry, load, store = parts
         return InstructionCost(form=form, entry=entry, load=load, store=store)
@@ -144,6 +149,8 @@ class MachineModel:
             return self.db[family], None, None
 
         if (self.name, key) not in _WARNED_DEFAULTS:
+            if len(_WARNED_DEFAULTS) >= 1 << 16:
+                _WARNED_DEFAULTS.clear()
             _WARNED_DEFAULTS.add((self.name, key))
             warnings.warn(
                 f"[{self.name}] no DB entry for '{key}'; using default "

@@ -4,15 +4,21 @@ Loads (or randomly initializes) a model, then serves a batch of synthetic
 requests through the continuous-batching engine — the CPU-scale counterpart
 of the decode_* dry-run cells.
 
-``--mode analyze`` serves synthetic *kernel-analysis* traffic instead: many
-concurrent requests over a small set of hot assembly loops, amortized through
-the batched ``analyze_kernels`` API and its process-level LRU
-(``repro.serving.analysis.AnalysisService``).
+``--mode analyze`` serves *kernel-analysis* traffic instead, through the
+versioned ``AnalysisService`` request/response API.  ``--arch`` then names a
+machine from the architecture registry (``tx2``/``csx``/``zen``/… or any
+alias, not an LLM config id), and ``--kernel-file`` analyzes a specific
+assembly file instead of the built-in hot-loop pool.  Output is JSON lines —
+one ``AnalysisResponse.to_dict()`` per request (malformed requests come back
+as per-request error envelopes) plus a final summary object — so other tools
+can consume the analyses directly.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import numpy as np
@@ -20,42 +26,79 @@ import numpy as np
 from repro.configs import RunConfig, get_config, list_archs, tiny_variant
 
 
-def _serve_analysis(args) -> None:
-    from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM
-    from repro.serving import AnalysisRequest, AnalysisService
+def _analysis_pool(args):
+    from repro.core.registry import get_arch
+    from repro.serving.analysis import AnalysisRequest
 
-    # Synthetic traffic: a stream of requests drawn from a few hot kernels,
-    # the common shape of analysis-in-a-tuning-loop workloads.
-    pool = [
-        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", isa="aarch64", unroll=4),
-        AnalysisRequest(asm=GS_CLX_ASM, arch="csx", isa="x86", unroll=4),
-        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", isa="aarch64", unroll=1),
+    if args.kernel_file:
+        with open(args.kernel_file) as f:
+            asm = f.read()
+        arch = get_arch(args.arch or "tx2").id
+        return [AnalysisRequest(asm=asm, arch=arch, unroll=args.unroll,
+                                name=args.kernel_file)]
+    if args.arch:
+        spec = get_arch(args.arch)
+        if spec.sample_asm is None:
+            raise SystemExit(f"arch '{spec.id}' has no built-in sample kernel; "
+                             f"pass --kernel-file")
+        return [
+            AnalysisRequest(asm=spec.sample_asm, arch=spec.id, unroll=u,
+                            name=f"{spec.id}-gauss-seidel/{u}x")
+            for u in (1, args.unroll)
+        ]
+    # Default synthetic traffic: a stream of requests drawn from a few hot
+    # kernels, the common shape of analysis-in-a-tuning-loop workloads.
+    tx2, csx = get_arch("tx2"), get_arch("csx")
+    return [
+        AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=args.unroll,
+                        name="gs-tx2"),
+        AnalysisRequest(asm=csx.sample_asm, arch="csx", unroll=args.unroll,
+                        name="gs-csx"),
+        AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=1,
+                        name="gs-tx2-1x"),
     ]
+
+
+def _serve_analysis(args) -> None:
+    from repro.serving.analysis import AnalysisService
+
+    try:
+        pool = _analysis_pool(args)
+    except (ValueError, OSError) as exc:  # unknown arch / bad --kernel-file
+        sys.exit(str(exc))
     rng = np.random.default_rng(0)
     requests = [pool[i] for i in rng.integers(0, len(pool), size=args.requests)]
 
     service = AnalysisService()
     t0 = time.time()
-    results = []
+    responses = []
     for start in range(0, len(requests), args.batch_size):
-        results.extend(
-            service.analyze_batch(requests[start:start + args.batch_size]))
+        responses.extend(
+            service.submit_batch(requests[start:start + args.batch_size]))
     dt = time.time() - t0
-    print(f"{len(results)} analysis requests in {dt * 1e3:.1f} ms "
-          f"({len(results) / max(dt, 1e-9):.0f} req/s)  "
-          f"cache hits={service.stats['hits']} misses={service.stats['misses']}")
-    for req, analysis in list(zip(requests, results))[:3]:
-        bracket = analysis.prediction_bracket()
-        print(f"  {req.arch}/{req.unroll}x: "
-              f"TP={bracket['lower_bound_tp']:.2f} "
-              f"LCD={bracket['expected_lcd']:.2f} "
-              f"CP={bracket['upper_bound_cp']:.2f} cy/it")
+
+    for resp in responses:
+        print(json.dumps(resp.to_dict()))
+    print(json.dumps({
+        "event": "summary",
+        "requests": len(responses),
+        "errors": sum(1 for r in responses if not r.ok),
+        "seconds": dt,
+        "req_per_s": len(responses) / max(dt, 1e-9),
+        "cache_hits": service.stats["hits"],
+        "cache_misses": service.stats["misses"],
+    }))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="generate", choices=("generate", "analyze"))
-    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list_archs())
+    # Validated per mode: an LLM config id when generating, an architecture-
+    # registry id/alias when analyzing (previously both hit list_archs()).
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--kernel-file", default=None,
+                    help="assembly file to analyze (--mode analyze)")
+    ap.add_argument("--unroll", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -68,12 +111,17 @@ def main() -> None:
         _serve_analysis(args)
         return
 
+    arch = args.arch or "tinyllama-1.1b"
+    if arch not in list_archs():
+        sys.exit(f"unknown model config '{arch}'; known: "
+                 f"{', '.join(list_archs())}")
+
     import jax
 
     from repro.models import init_params
     from repro.serving import ServeEngine
 
-    cfg = get_config(args.arch)
+    cfg = get_config(arch)
     if args.tiny:
         cfg = tiny_variant(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))

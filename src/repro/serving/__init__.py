@@ -1,5 +1,14 @@
-from repro.serving.analysis import (AnalysisRequest, AnalysisService)
-from repro.serving.engine import GenerationResult, ServeEngine
+from repro.serving.analysis import (AnalysisRequest, AnalysisResponse,
+                                    AnalysisService)
 
-__all__ = ["AnalysisRequest", "AnalysisService", "GenerationResult",
-           "ServeEngine"]
+__all__ = ["AnalysisRequest", "AnalysisResponse", "AnalysisService",
+           "GenerationResult", "ServeEngine"]
+
+
+def __getattr__(attr):
+    # The token engine pulls in jax; analysis-only callers (the repro.api
+    # facade, serve --mode analyze) should not pay that import.
+    if attr in ("GenerationResult", "ServeEngine"):
+        from repro.serving import engine
+        return getattr(engine, attr)
+    raise AttributeError(f"module 'repro.serving' has no attribute '{attr}'")

@@ -1,8 +1,14 @@
 """Kernel-analysis service for the serving path.
 
-Wraps the batched ``analyze_kernels`` engine behind a request-oriented API:
-callers submit raw assembly text (plus ISA / machine / unroll), the service
-parses, analyzes, and returns :class:`repro.core.analysis.Analysis` objects.
+Request/response frontend over the ``repro.api`` facade: callers submit raw
+assembly text plus an architecture id (any registry alias — the arch →
+parser/model tables live in :mod:`repro.core.registry`, not here), the
+service parses, analyzes, and answers with versioned
+:class:`AnalysisResponse` envelopes carrying serializable
+:class:`~repro.core.analysis.report.AnalysisReport` payloads.  A malformed
+request (unknown arch, bad isa, unparsable asm) yields a per-request error
+response; the rest of the wave is served normally.
+
 Amortization happens at three levels:
 
 1. one :class:`MachineModel` instance per architecture lives for the service
@@ -13,29 +19,28 @@ Amortization happens at three levels:
 3. parsed-kernel results are additionally cached here by request key, so a
    repeat request skips even the parse.
 
-This is the CPU-side counterpart of the continuous-batching token engine in
+Cache hits are returned as per-request views carrying the requester's kernel
+name (the underlying result objects are shared).  This is the CPU-side
+counterpart of the continuous-batching token engine in
 ``repro.serving.engine``: many small independent requests, served out of one
 warm process.
 """
 
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.analysis import Analysis, analyze_kernels
+from repro.core.analysis import (Analysis, AnalysisReport, analysis_view,
+                                 analyze_kernels)
 from repro.core.analysis.analyze import LRUCache
 from repro.core.isa import parse_aarch64, parse_x86
-from repro.core.machine import (MachineModel, cascade_lake, neoverse_n1,
-                                thunderx2, zen, zen2)
+from repro.core.machine import MachineModel
+from repro.core.registry import ArchSpec, get_arch
 
-_MODEL_FACTORIES: Dict[str, Callable[[], MachineModel]] = {
-    "tx2": thunderx2,
-    "csx": cascade_lake,
-    "zen": zen,
-    "zen2": zen2,
-    "n1": neoverse_n1,
-}
+#: Version of the request/response wire contract (bumped on breaking change).
+API_VERSION = 1
 
 _PARSERS = {
     "aarch64": parse_aarch64,
@@ -45,15 +50,73 @@ _PARSERS = {
 
 @dataclass(frozen=True)
 class AnalysisRequest:
+    """One kernel-analysis request (v1 wire contract).
+
+    ``isa`` is optional: when empty it is resolved from the architecture
+    registry.  ``arch`` accepts any registry id or alias.
+    """
+
     asm: str
-    arch: str = "tx2"  # machine model id (see _MODEL_FACTORIES)
-    isa: str = "aarch64"  # "aarch64" | "x86"
+    arch: str = "tx2"
+    isa: str = ""  # "aarch64" | "x86" | "" (resolve via registry)
     unroll: int = 1
     name: str = "kernel"
+    version: int = API_VERSION
 
     @property
     def key(self) -> Tuple[str, str, str, int]:
-        return (self.arch, self.isa, self.asm, self.unroll)
+        """Canonical cache identity: registry-resolved arch id + isa, so
+        aliases (``cascadelake`` vs ``csx``) share one entry.  Falls back to
+        the raw fields when the arch is unknown (the request then errors at
+        analysis time anyway)."""
+        try:
+            spec = get_arch(self.arch)
+        except ValueError:
+            return (self.arch, self.isa, self.asm, self.unroll)
+        return (spec.id, self.isa or spec.isa, self.asm, self.unroll)
+
+    def to_dict(self) -> Dict:
+        return {"version": self.version, "asm": self.asm, "arch": self.arch,
+                "isa": self.isa, "unroll": self.unroll, "name": self.name}
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "AnalysisRequest":
+        return cls(asm=data["asm"], arch=data.get("arch", "tx2"),
+                   isa=data.get("isa", ""), unroll=data.get("unroll", 1),
+                   name=data.get("name", "kernel"),
+                   version=data.get("version", API_VERSION))
+
+
+@dataclass(frozen=True)
+class AnalysisResponse:
+    """Versioned per-request envelope: a report, or an error string."""
+
+    ok: bool
+    name: str
+    arch: str = ""
+    report: Optional[AnalysisReport] = None
+    error: str = ""
+    version: int = API_VERSION
+
+    def to_dict(self) -> Dict:
+        return {
+            "version": self.version,
+            "ok": self.ok,
+            "name": self.name,
+            "arch": self.arch,
+            "error": self.error,
+            "report": self.report.to_dict() if self.report is not None else None,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "AnalysisResponse":
+        report = data.get("report")
+        return cls(
+            ok=data["ok"], name=data.get("name", ""),
+            arch=data.get("arch", ""), error=data.get("error", ""),
+            report=AnalysisReport.from_dict(report) if report else None,
+            version=data.get("version", API_VERSION),
+        )
 
 
 @dataclass
@@ -62,7 +125,7 @@ class AnalysisService:
 
     max_cached: int = 256
     models: Dict[str, MachineModel] = field(default_factory=dict)
-    _cache: LRUCache = None  # type: ignore[assignment]
+    _cache: LRUCache = field(init=False, repr=False)
 
     def __post_init__(self):
         self._cache = LRUCache(self.max_cached)
@@ -72,16 +135,41 @@ class AnalysisService:
         return self._cache.stats
 
     def model_for(self, arch: str) -> MachineModel:
-        model = self.models.get(arch)
+        """Warm model, resolved through the registry (aliases share one
+        instance).  Backed by the facade's process-wide model cache so
+        ``repro.api.analyze`` callers and the service share one instruction-
+        lookup memo per architecture."""
+        spec = get_arch(arch)  # ValueError for unknown archs
+        model = self.models.get(spec.id)
         if model is None:
-            try:
-                model = _MODEL_FACTORIES[arch]()
-            except KeyError:
-                raise ValueError(
-                    f"unknown arch '{arch}'; known: {sorted(_MODEL_FACTORIES)}"
-                ) from None
-            self.models[arch] = model
+            from repro.api import model_for as shared_model_for
+            model = shared_model_for(spec)
+            self.models[spec.id] = model
         return model
+
+    # -- versioned request/response API ------------------------------------
+
+    def submit(self, request: AnalysisRequest) -> AnalysisResponse:
+        return self.submit_batch([request])[0]
+
+    def submit_batch(
+        self, requests: Sequence[AnalysisRequest]
+    ) -> List[AnalysisResponse]:
+        """Serve a wave; malformed requests become error responses while the
+        rest of the wave is analyzed normally."""
+        responses = []
+        for req, result in zip(requests, self._analyze_batch(requests)):
+            if isinstance(result, Exception):
+                responses.append(AnalysisResponse(
+                    ok=False, name=req.name, arch=req.arch,
+                    error=f"{type(result).__name__}: {result}"))
+            else:
+                responses.append(AnalysisResponse(
+                    ok=True, name=req.name, arch=result.model.name,
+                    report=result.to_report()))
+        return responses
+
+    # -- legacy Analysis API (raises on the first bad request) -------------
 
     def analyze(self, request: AnalysisRequest) -> Analysis:
         return self.analyze_batch([request])[0]
@@ -91,36 +179,84 @@ class AnalysisService:
 
         Identical requests within the wave (and across waves, via the LRU)
         are parsed and analyzed once; per (arch, unroll) group the distinct
-        kernels go through one ``analyze_kernels`` batch.
+        kernels share one warm model through ``analyze_kernels``.
         """
-        out: List[Optional[Analysis]] = [None] * len(requests)
-        # (arch, isa, unroll) -> list of (request positions, parsed kernel)
-        groups: Dict[tuple, List[Tuple[List[int], object]]] = {}
+        results = self._analyze_batch(requests)
+        for result in results:
+            if isinstance(result, Exception):
+                # Raise a copy: raising the (possibly negatively cached,
+                # shared) object would attach this frame's traceback to it,
+                # pinning the request list for the LRU lifetime.
+                raise copy.copy(result)
+        return results  # type: ignore[return-value]
+
+    # -- engine ------------------------------------------------------------
+
+    def _resolve(self, req: AnalysisRequest) -> Tuple[ArchSpec, object, tuple]:
+        """Registry resolution: (spec, parser, cache key).  The cache key
+        uses the canonical arch id, so aliases share entries."""
+        spec = get_arch(req.arch)
+        if spec.is_hlo:
+            raise ValueError(
+                f"arch '{spec.id}' is an HLO target; the analysis service "
+                f"serves assembly kernels (use repro.api.analyze for HLO)")
+        isa = req.isa or spec.isa
+        parser = _PARSERS.get(isa)
+        if parser is None:
+            raise ValueError(f"unknown isa '{isa}'")
+        if req.unroll < 1:
+            raise ValueError(f"unroll must be >= 1, got {req.unroll}")
+        # Same shape as AnalysisRequest.key, built from the spec already in
+        # hand (the property would resolve the registry a second time).
+        return spec, parser, (spec.id, isa, req.asm, req.unroll)
+
+    def _analyze_batch(
+        self, requests: Sequence[AnalysisRequest]
+    ) -> List[Union[Analysis, Exception]]:
+        out: List[Optional[Union[Analysis, Exception]]] = [None] * len(requests)
+        # One job per distinct uncached kernel in the wave.
+        jobs: List[Tuple[List[int], object, tuple, str, int]] = []
         pending: Dict[tuple, List[int]] = {}
         for pos, req in enumerate(requests):
-            hit = self._cache.get(req.key)
-            if hit is not None:
-                out[pos] = hit
+            try:
+                spec, parser, key = self._resolve(req)
+            except ValueError as exc:
+                out[pos] = exc
                 continue
-            if req.key in pending:
+            hit = self._cache.get(key)
+            if hit is not None:
+                # Errors are negatively cached: a hot malformed kernel is
+                # parsed/analyzed once, not once per retry.
+                out[pos] = (hit if isinstance(hit, Exception)
+                            else analysis_view(hit, req.name))
+                continue
+            if key in pending:
                 # In-wave duplicate: analyzed once, but still a served hit.
-                pending[req.key].append(pos)
+                pending[key].append(pos)
                 self._cache.count_extra_hits()
                 continue
-            pending[req.key] = [pos]
-            parser = _PARSERS.get(req.isa)
-            if parser is None:
-                raise ValueError(f"unknown isa '{req.isa}'")
-            kernel = parser(req.asm, name=req.name)
-            groups.setdefault((req.arch, req.unroll), []).append(
-                (pending[req.key], kernel))
+            try:
+                kernel = parser(req.asm, name=req.name)
+            except Exception as exc:  # parser rejects malformed asm
+                # Strip the traceback before caching: its frames would pin
+                # parser locals (including the asm text) for the LRU lifetime.
+                out[pos] = exc.with_traceback(None)
+                self._cache.put(key, out[pos])
+                continue
+            pending[key] = [pos]
+            jobs.append((pending[key], kernel, key, spec.id, req.unroll))
 
-        for (arch, unroll), entries in groups.items():
-            model = self.model_for(arch)
-            analyses = analyze_kernels([k for _, k in entries], model,
-                                       unroll=unroll)
-            for (positions, _), analysis in zip(entries, analyses):
+        for positions, kernel, key, arch_id, unroll in jobs:
+            model = self.model_for(arch_id)  # memoized per service
+            try:
+                analysis = analyze_kernels([kernel], model, unroll=unroll)[0]
+            except Exception as exc:
+                exc = exc.with_traceback(None)
                 for pos in positions:
-                    out[pos] = analysis
-                self._cache.put(requests[positions[0]].key, analysis)
+                    out[pos] = exc
+                self._cache.put(key, exc)
+                continue
+            for pos in positions:
+                out[pos] = analysis_view(analysis, requests[pos].name)
+            self._cache.put(key, analysis)
         return out  # type: ignore[return-value]

@@ -1,0 +1,381 @@
+"""Public-API surface tests: the ``repro.api`` facade, the architecture
+registry, the serializable ``AnalysisReport`` (JSON round-trip), the versioned
+``AnalysisService`` request/response envelopes, and the serve CLI's JSON-lines
+output."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.api import analyze, analyze_raw, asm_arch_ids, get_arch, list_arch_ids
+from repro.core import analyze_kernel, analyze_kernels
+from repro.core.analysis import AnalysisReport, clear_analysis_cache
+from repro.core.isa import parse_aarch64
+from repro.core.machine import thunderx2
+from repro.core.registry import ArchSpec, register_arch
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM, TABLE1
+from repro.serving.analysis import (API_VERSION, AnalysisRequest,
+                                    AnalysisResponse, AnalysisService)
+
+GS_CASES = [("tx2", GS_TX2_ASM), ("csx", GS_CLX_ASM), ("zen", GS_ZEN_ASM)]
+
+WHILE_HLO = """
+HloModule api_test, num_partitions=1
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,128]{1,0} multiply(%x, %x)
+  ROOT %t = (s32[], f32[8,128]) tuple(%i2, %y)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %a)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+# -- facade: one call, many source shapes -------------------------------------
+
+
+@pytest.mark.parametrize("arch,asm", GS_CASES)
+def test_facade_matches_legacy_numbers_and_text(arch, asm):
+    """analyze() == the legacy parser+model+analyze_kernel pipeline, for the
+    paper's validation kernels — numbers and rendered report."""
+    spec = get_arch(arch)
+    legacy = analyze_kernel(spec.parser(asm, name="gauss-seidel"),
+                            spec.model_factory(), unroll=4)
+    report = analyze(asm, arch=arch, unroll=4, name="gauss-seidel")
+    assert report.prediction_bracket() == legacy.prediction_bracket()
+    assert round(report.tp_per_it, 2) == TABLE1[arch].tp
+    assert report.lcd_per_it == pytest.approx(TABLE1[arch].lcd)
+    assert report.cp_per_it == pytest.approx(TABLE1[arch].cp)
+    assert report.render("text") == legacy.report()
+
+
+def test_facade_accepts_file_path(tmp_path):
+    path = tmp_path / "gs.s"
+    path.write_text(GS_TX2_ASM)
+    from_text = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    from_path = analyze(str(path), arch="thunderx2", unroll=4)  # alias too
+    assert from_path.prediction_bracket() == from_text.prediction_bracket()
+    assert from_path.kernel_name == "gs.s"
+
+
+def test_facade_accepts_parsed_kernel():
+    kernel = parse_aarch64(GS_TX2_ASM, name="pre-parsed")
+    report = analyze(kernel, arch="tx2", unroll=4)
+    assert report.kernel_name == "pre-parsed"
+    assert report.prediction_bracket() == \
+        analyze(GS_TX2_ASM, arch="tx2", unroll=4).prediction_bracket()
+
+
+def test_facade_accepts_hlo_module_same_call():
+    """An HLO while-body answers with the same bracket shape as an asm loop."""
+    from repro.core.hlo import parse_hlo
+
+    asm_report = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    hlo_report = analyze(parse_hlo(WHILE_HLO), arch="tpu-v5e")
+    text_report = analyze(WHILE_HLO)  # auto-detected, default arch
+    assert set(hlo_report.prediction_bracket()) == \
+        set(asm_report.prediction_bracket())
+    assert hlo_report.kind == "hlo" and text_report.kind == "hlo"
+    assert hlo_report.lcd_block > 0  # the x*x while chain is carried
+    assert hlo_report.cp_block >= hlo_report.lcd_block - 1e-12
+
+
+def test_facade_accepts_hlo_file_path(tmp_path):
+    path = tmp_path / "module.hlo.txt"
+    path.write_text(WHILE_HLO)
+    from_path = analyze(str(path), arch="tpu-v5e")
+    from_text = analyze(WHILE_HLO, arch="tpu-v5e")
+    assert from_path.kind == "hlo"
+    assert from_path.prediction_bracket() == from_text.prediction_bracket()
+    # An HLO *file* auto-routes even under the default asm arch.
+    assert analyze(str(path)).kind == "hlo"
+    with pytest.raises(ValueError, match="expects an HLO module"):
+        analyze("fadd d0, d0, d1", arch="tpu-v5e")
+    with pytest.raises(ValueError, match="expects an HLO module"):
+        analyze(parse_aarch64("fadd d0, d0, d1"), arch="tpu")
+    with pytest.raises(ValueError, match="not a valid HLO module"):
+        analyze("HloModule truncated\n", arch="tx2")  # auto-routed garbage
+
+
+def test_facade_rejects_unanalyzable_source():
+    with pytest.raises(TypeError):
+        analyze(12345, arch="tx2")
+    with pytest.raises(FileNotFoundError):
+        analyze("no/such/kernel.s", arch="tx2")
+
+
+# -- JSON round-trip ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,asm", GS_CASES)
+def test_report_json_roundtrip_bit_identical(arch, asm):
+    report = analyze(asm, arch=arch, unroll=4, name="gauss-seidel")
+    payload = json.dumps(report.to_dict(), sort_keys=True)
+    restored = AnalysisReport.from_dict(json.loads(payload))
+    assert json.dumps(restored.to_dict(), sort_keys=True) == payload
+    assert restored.render("text") == report.render("text")
+    assert restored.prediction_bracket() == report.prediction_bracket()
+
+
+def test_hlo_report_json_roundtrip():
+    report = analyze(WHILE_HLO, arch="tpu")
+    payload = json.dumps(report.to_dict(), sort_keys=True)
+    restored = AnalysisReport.from_dict(json.loads(payload))
+    assert json.dumps(restored.to_dict(), sort_keys=True) == payload
+    assert restored.render("text") == report.render("text")
+
+
+def test_report_rejects_newer_schema():
+    report = analyze("fadd d0, d0, d1", arch="tx2")
+    data = report.to_dict()
+    data["schema_version"] = 99
+    with pytest.raises(ValueError):
+        AnalysisReport.from_dict(data)
+
+
+def test_renderers_pluggable():
+    report = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    assert json.loads(report.render("json"))["arch"] == "tx2"
+    md = report.render("markdown")
+    assert md.startswith("###") and "`tx2`" in md
+    with pytest.raises(ValueError):
+        report.render("nope")
+
+
+# -- registry -----------------------------------------------------------------
+
+
+def test_registry_alias_resolution():
+    assert get_arch("cascadelake").id == "csx"
+    assert get_arch("CLX").id == "csx"
+    assert get_arch("cascade-lake").id == "csx"
+    assert get_arch("thunderx2").id == "tx2"
+    assert get_arch("graviton2").id == "n1"
+    assert get_arch(" Zen2 ").id == "zen2"
+    assert get_arch("tpu").is_hlo
+
+
+def test_registry_contents():
+    ids = list_arch_ids()
+    assert {"tx2", "csx", "zen", "zen2", "n1", "tpu-v5e"} <= set(ids)
+    assert "tpu-v5e" not in asm_arch_ids()
+    for arch_id in asm_arch_ids():
+        spec = get_arch(arch_id)
+        assert spec.parser is not None and spec.frequency_ghz > 0
+        model = spec.model_factory()
+        # The registry card must agree with the machine model it names.
+        assert spec.frequency_ghz == model.frequency_ghz
+        assert spec.isa == model.isa and spec.id == model.name
+
+
+def test_registry_unknown_arch_lists_known():
+    with pytest.raises(ValueError, match="unknown arch 'skylake'"):
+        get_arch("skylake")
+
+
+def test_registry_rejects_conflicting_alias_atomically():
+    with pytest.raises(ValueError, match="already registered"):
+        register_arch(ArchSpec(id="imposter", isa="x86", aliases=("csx",),
+                               model_factory=lambda: None, frequency_ghz=1.0))
+    # The failed registration must leave no trace (no half-registered names).
+    with pytest.raises(ValueError, match="unknown arch"):
+        get_arch("imposter")
+    assert get_arch("csx").id == "csx"
+
+
+# -- versioned service --------------------------------------------------------
+
+
+def test_service_batch_isolates_malformed_request():
+    """One bad request yields an error response; the rest of the wave is
+    analyzed normally."""
+    service = AnalysisService()
+    responses = service.submit_batch([
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="good-1"),
+        AnalysisRequest(asm=GS_CLX_ASM, arch="not-a-machine", name="bad"),
+        AnalysisRequest(asm=GS_CLX_ASM, arch="csx", isa="martian", name="bad-isa"),
+        AnalysisRequest(asm=GS_CLX_ASM, arch="cascadelake", unroll=4,
+                        name="good-2"),
+    ])
+    assert [r.ok for r in responses] == [True, False, False, True]
+    assert all(r.version == API_VERSION for r in responses)
+    assert "unknown arch" in responses[1].error
+    assert "unknown isa" in responses[2].error
+    # unroll=0 (reachable from wire data) must be a per-request error, not a
+    # deferred ZeroDivisionError during report serialization.
+    (bad_unroll,) = service.submit_batch([
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=0)])
+    assert not bad_unroll.ok and "unroll" in bad_unroll.error
+    with pytest.raises(ValueError, match="unroll"):
+        analyze(GS_TX2_ASM, arch="tx2", unroll=0)
+    assert responses[0].report.prediction_bracket()["expected_lcd"] == \
+        pytest.approx(TABLE1["tx2"].lcd)
+    assert responses[3].report.arch == "csx"
+    # Envelopes survive the wire.
+    wire = json.dumps([r.to_dict() for r in responses])
+    restored = [AnalysisResponse.from_dict(d) for d in json.loads(wire)]
+    assert [r.ok for r in restored] == [True, False, False, True]
+    assert restored[0].report.render("text") == \
+        responses[0].report.render("text")
+
+
+def test_service_negatively_caches_parse_failures(monkeypatch):
+    """A hot malformed kernel is parsed once; retries are served from the
+    cache as error responses instead of re-parsing every wave."""
+    import repro.serving.analysis as serving_analysis
+
+    calls = {"n": 0}
+
+    def exploding_parser(text, name="kernel"):
+        calls["n"] += 1
+        raise RuntimeError("parse exploded")
+
+    monkeypatch.setitem(serving_analysis._PARSERS, "aarch64",
+                        exploding_parser)
+    service = AnalysisService()
+    bad = AnalysisRequest(asm="whatever", arch="tx2", name="bad")
+    r1 = service.submit(bad)
+    r2 = service.submit(bad)
+    assert not r1.ok and not r2.ok
+    assert "parse exploded" in r1.error and r1.error == r2.error
+    assert calls["n"] == 1
+    # HLO targets are rejected with a pointer to the facade.
+    hlo = service.submit(AnalysisRequest(asm=GS_TX2_ASM, arch="tpu-v5e"))
+    assert not hlo.ok and "HLO target" in hlo.error
+
+
+def test_service_shares_facade_model_cache():
+    from repro.api import model_for
+
+    service = AnalysisService()
+    assert service.model_for("cascadelake") is model_for("csx")
+
+
+def test_request_key_canonical_across_aliases():
+    a = AnalysisRequest(asm="fadd d0, d0, d1", arch="csx")
+    b = AnalysisRequest(asm="fadd d0, d0, d1", arch="cascadelake", isa="x86")
+    assert a.key == b.key
+    unknown = AnalysisRequest(asm="x", arch="not-a-machine")
+    assert unknown.key == ("not-a-machine", "", "x", 1)
+
+
+def test_service_legacy_analyze_batch_still_raises():
+    service = AnalysisService()
+    with pytest.raises(ValueError, match="unknown arch"):
+        service.analyze_batch([AnalysisRequest(asm="fadd d0, d0, d1",
+                                               arch="not-a-machine")])
+    # and still returns live Analysis objects for good requests
+    analysis = service.analyze(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                               unroll=4))
+    assert analysis.lcd_per_it == pytest.approx(TABLE1["tx2"].lcd)
+
+
+def test_service_cache_hit_carries_requester_name():
+    """Regression: a cache hit used to return the first requester's Analysis
+    including its kernel.name."""
+    service = AnalysisService()
+    first = service.analyze(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                            unroll=4, name="first"))
+    second = service.analyze(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                             unroll=4, name="second"))
+    assert service.stats["hits"] >= 1
+    assert first.kernel.name == "first"
+    assert second.kernel.name == "second"
+    assert second.tp is first.tp  # shared result objects, renamed view
+    # Same for in-wave duplicates and the versioned envelope path.
+    r1, r2 = service.submit_batch([
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="wave-a"),
+        AnalysisRequest(asm=GS_TX2_ASM, arch="thunderx2", unroll=4,
+                        name="wave-b"),  # alias: same canonical cache key
+    ])
+    assert r1.report.kernel_name == "wave-a"
+    assert r2.report.kernel_name == "wave-b"
+    # Cross-wave cache hits reuse the memoized report snapshot: only the
+    # kernel_name is re-stamped, the rows tuple is shared.
+    (r3,) = service.submit_batch([
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="wave-c")])
+    assert r3.report.kernel_name == "wave-c"
+    assert r3.report.rows is r1.report.rows
+
+
+def test_analyze_kernels_cache_key_covers_memory_structure():
+    """Regression: programmatically built forms (raw='') differing only in
+    load/store writeback structure must not collide in the process LRU."""
+    from repro.core.isa import InstructionForm, Kernel, MemoryRef, Register
+
+    def str_kernel(post_index):
+        form = InstructionForm(
+            mnemonic="str",
+            source_registers=("d0", "x1"),
+            dest_registers=("x1",) if post_index else (),
+            stores=(MemoryRef(base=Register("x1"), post_index=post_index),),
+        )
+        return Kernel(instructions=(form,), isa="aarch64", name="k")
+
+    from repro.core.analysis.analyze import _cache_key
+
+    clear_analysis_cache()
+    model = thunderx2()
+    assert _cache_key(str_kernel(False), model, 1) != \
+        _cache_key(str_kernel(True), model, 1)
+    plain = analyze_kernels([str_kernel(False)], model)[0]
+    writeback = analyze_kernels([str_kernel(True)], model)[0]
+    # A collision would serve the first analysis as a shared view (same tp
+    # object); distinct kernels must get distinct analyses.
+    assert writeback.tp is not plain.tp
+    clear_analysis_cache()
+
+
+def test_analyze_kernels_cache_hit_carries_requester_name():
+    """Same regression at the batch-API level (process LRU)."""
+    clear_analysis_cache()
+    model = thunderx2()
+    k1 = parse_aarch64(GS_TX2_ASM, name="alpha")
+    k2 = parse_aarch64(GS_TX2_ASM, name="beta")
+    a1 = analyze_kernels([k1], model, unroll=4)[0]
+    a2 = analyze_kernels([k2], model, unroll=4)[0]
+    assert a1.kernel.name == "alpha"
+    assert a2.kernel.name == "beta"
+    assert a2.lcd is a1.lcd  # cached result shared under the view
+    assert a2.report() != a1.report()  # header carries the right name
+    clear_analysis_cache()
+
+
+# -- serve CLI JSON lines -----------------------------------------------------
+
+
+def test_serve_analyze_emits_parseable_json_lines():
+    repo_root = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-W", "ignore", "-m", "repro.launch.serve",
+         "--mode", "analyze", "--requests", "5", "--arch", "zen2"],
+        capture_output=True, text=True, timeout=120,
+        cwd=repo_root, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    lines = [json.loads(l) for l in proc.stdout.splitlines() if l.strip()]
+    assert len(lines) == 6  # 5 responses + summary
+    assert all(o["ok"] and o["version"] == API_VERSION for o in lines[:-1])
+    assert all(o["report"]["arch"] == "zen2" for o in lines[:-1])
+    assert lines[-1]["event"] == "summary" and lines[-1]["errors"] == 0

@@ -5,11 +5,15 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   table2_tx2_detail    — paper Table II: TX2 port pressures
   analyzer_throughput  — analysis cost per instruction form (tool perf)
   analyzer_scaling     — analysis cost growth on 32/128/512-instr kernels
+  scheduler_balance    — min-max port-assignment cost on the 512-instr kernel
   analysis_service     — serving-path req/s + cache hit rate on a hot trace
   ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
   hlo_roofline         — HLO parse + three-term roofline on a compiled step
   train_step_tiny      — end-to-end tiny train step wall time
   decode_step_tiny     — end-to-end tiny decode step wall time
+
+Pass benchmark names as argv to run a subset (CI smoke runs
+``run.py scheduler_balance analyzer_scaling``).
 """
 
 from __future__ import annotations
@@ -121,6 +125,32 @@ def analyzer_scaling() -> None:
     _row("analyzer_scaling", times[512],
          f"growth_32_128={g1:.1f}x;growth_128_512={g2:.1f}x;"
          f"subquadratic={subquadratic}")
+
+
+def scheduler_balance() -> None:
+    """Min-max µ-op→port assignment cost, isolated from the rest of the
+    analysis.  ``derived`` reports both throughput bounds and checks the
+    ordering invariant (balanced <= optimistic) plus the share of a full
+    ``analyze_kernel`` the scheduler accounts for — the regression guard for
+    the balanced bound staying off the quadratic cliff."""
+    from repro.core import analyze_kernel, thunderx2
+    from repro.core.analysis import (balance_from_costs, gather_classes,
+                                     throughput_from_costs)
+
+    model = thunderx2()
+    kernel = _synthetic_kernel(512)
+    costs = model.resolve_kernel(kernel)
+    us = _timeit(lambda: balance_from_costs(costs, model.ports),
+                 repeats=7, warmup=2)
+    full_us = _timeit(lambda: analyze_kernel(kernel, model),
+                      repeats=3, warmup=1)
+    schedule = balance_from_costs(costs, model.ports)
+    tp = throughput_from_costs(costs, model)
+    assert schedule.bound <= tp.block_throughput + 1e-12
+    _row("scheduler_balance", us,
+         f"balanced={schedule.bound:.2f};optimistic={tp.block_throughput:.2f};"
+         f"classes={len(gather_classes(costs))};n=512;"
+         f"share_of_analyze={us / full_us:.3f}")
 
 
 def analysis_service() -> None:
@@ -241,17 +271,22 @@ def decode_step_tiny() -> None:
     _row("decode_step_tiny", us, f"tok_per_s={4 / (us / 1e6):,.0f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import sys
+
+    names = sys.argv[1:] if argv is None else list(argv)
+    table = {fn.__name__: fn for fn in (
+        table1_gauss_seidel, table2_tx2_detail, analyzer_throughput,
+        analyzer_scaling, scheduler_balance, analysis_service,
+        ibench_pipeline, hlo_roofline, train_step_tiny, decode_step_tiny)}
+    unknown = [n for n in names if n not in table]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark(s) {unknown}; known: {sorted(table)}")
     print("name,us_per_call,derived")
-    table1_gauss_seidel()
-    table2_tx2_detail()
-    analyzer_throughput()
-    analyzer_scaling()
-    analysis_service()
-    ibench_pipeline()
-    hlo_roofline()
-    train_step_tiny()
-    decode_step_tiny()
+    for name, fn in table.items():
+        if not names or name in names:
+            fn()
 
 
 if __name__ == "__main__":

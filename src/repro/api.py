@@ -15,6 +15,12 @@ named by an architecture id or alias resolved through the central registry
     print(report.render("text"))                        # or "json"/"markdown"
     payload = report.to_dict()                          # stable JSON schema
 
+Assembly reports carry two throughput bounds (schema v2): ``tp_block`` (the
+paper's uniform-split model, bit-stable) and ``tp_balanced_block`` (the
+min-max optimal µ-op→port assignment from
+:mod:`repro.core.analysis.scheduler`), with per-port utilization under the
+optimal schedule in ``balanced_port_load``.
+
 Analyses share the process-level LRU and one warm :class:`MachineModel` per
 architecture, so hot loops repeated across calls are analyzed once.  For
 request/response serving (batching, per-request error envelopes), use

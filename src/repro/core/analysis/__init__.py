@@ -1,6 +1,10 @@
 from repro.core.analysis.throughput import (ThroughputResult,
                                             throughput_analysis,
                                             throughput_from_costs)
+from repro.core.analysis.scheduler import (BalancedSchedule,
+                                           balance_from_costs,
+                                           brute_force_min_max,
+                                           gather_classes, min_max_load)
 from repro.core.analysis.dag import DependencyDAG, Node, build_dag
 from repro.core.analysis.critical_path import (CriticalPathResult,
                                                critical_path,
@@ -17,6 +21,11 @@ from repro.core.analysis.render import register_renderer, render
 __all__ = [
     "Analysis",
     "AnalysisReport",
+    "BalancedSchedule",
+    "balance_from_costs",
+    "brute_force_min_max",
+    "gather_classes",
+    "min_max_load",
     "InstructionRow",
     "LCDChainRow",
     "SCHEMA_VERSION",

@@ -43,6 +43,11 @@ class Analysis:
         return self.tp.per_iteration(self.unroll)
 
     @property
+    def tp_balanced_per_it(self) -> float:
+        """Min-max optimal-assignment throughput bound (cy per iteration)."""
+        return self.tp.balanced_per_iteration(self.unroll)
+
+    @property
     def cp_per_it(self) -> float:
         return self.cp.per_iteration(self.unroll)
 

@@ -33,7 +33,9 @@ def render(report, fmt: str = "text") -> str:
 
 
 def _shown_ports(report) -> List[str]:
-    return [p for p in report.ports if report.port_pressure.get(p, 0.0) > 0.0]
+    return [p for p in report.ports
+            if report.port_pressure.get(p, 0.0) > 0.0
+            or report.balanced_port_load.get(p, 0.0) > 0.0]
 
 
 def _text_asm(report) -> str:
@@ -65,9 +67,16 @@ def _text_asm(report) -> str:
     )
     lines.append(f"{per_it} | {report.lcd_per_it:5.1f} {report.cp_per_it:5.1f} | "
                  f"per high-level iteration")
+    balanced = " ".join(f"{report.balanced_port_load.get(p, 0.0):5.2f}"
+                        for p in shown_ports)
+    lines.append(f"{balanced} | {'':5} {'':5} | "
+                 f"balanced port load (optimal µ-op schedule, per block)")
     lines.append("")
     lines.append(f"TP  (lower bound): {report.tp_per_it:6.2f} cy/it   "
-                 f"bottleneck port {report.bottleneck_port}")
+                 f"bottleneck port {report.bottleneck_port}  (uniform split)")
+    lines.append(f"TP  (balanced)   : {report.tp_balanced_per_it:6.2f} cy/it   "
+                 f"bottleneck port {report.balanced_bottleneck}  "
+                 f"(min-max optimal assignment)")
     lines.append(f"LCD (expected)  : {report.lcd_per_it:6.2f} cy/it   "
                  f"{len(report.lcd_chains)} cyclic chain(s) found")
     lines.append(f"CP  (upper bound): {report.cp_per_it:6.2f} cy/it")
@@ -134,6 +143,15 @@ def render_markdown(report) -> str:
     lines.append(f"- **TP** (lower bound): "
                  f"{bracket['lower_bound_tp'] * scale:.2f} {unit}/it — "
                  f"bottleneck `{report.bottleneck_port}`")
+    if report.kind != "hlo":
+        util = ", ".join(
+            f"`{p}`={report.balanced_port_load.get(p, 0.0):.2f}"
+            for p in shown_ports)
+        lines.append(f"- **TP** (balanced): "
+                     f"{report.tp_balanced_per_it * scale:.2f} {unit}/it — "
+                     f"optimal µ-op→port assignment, bottleneck "
+                     f"`{report.balanced_bottleneck}`; per-block port load: "
+                     f"{util}")
     lines.append(f"- **LCD** (expected): "
                  f"{bracket['expected_lcd'] * scale:.2f} {unit}/it — "
                  f"{len(report.lcd_chains)} cyclic chain(s)")

@@ -17,10 +17,14 @@ consume an HLO while-body and an asm loop identically.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional, Tuple
 
-SCHEMA_VERSION = 1
+#: v2 adds the balanced (min-max optimal port assignment) throughput bound:
+#: ``tp_balanced_block``, ``balanced_port_load``, ``balanced_bottleneck``.
+#: v1 payloads load with ``balanced == optimistic`` (v1 predates the
+#: scheduler, when the uniform split was the only model).
+SCHEMA_VERSION = 2
 
 #: Bracket keys shared by both kinds — the paper's [TP, CP] runtime bracket
 #: with the LCD as the expected value.
@@ -65,10 +69,14 @@ class AnalysisReport:
     rows: Tuple[InstructionRow, ...]
     port_pressure: Dict[str, float]  # per-block totals, model port order
     bottleneck_port: str
-    tp_block: float  # per assembly-block / per step
+    tp_block: float  # optimistic bound, per assembly-block / per step
     cp_block: float
     lcd_block: float
     lcd_chains: Tuple[LCDChainRow, ...] = ()
+    # Balanced bound: min-max optimal µ-op→port assignment (schema v2).
+    tp_balanced_block: float = 0.0
+    balanced_port_load: Dict[str, float] = field(default_factory=dict)
+    balanced_bottleneck: str = ""
     schema_version: int = SCHEMA_VERSION
 
     # -- derived -----------------------------------------------------------
@@ -84,6 +92,10 @@ class AnalysisReport:
     @property
     def lcd_per_it(self) -> float:
         return self.lcd_block / self.unroll
+
+    @property
+    def tp_balanced_per_it(self) -> float:
+        return self.tp_balanced_block / self.unroll
 
     def prediction_bracket(self) -> Dict[str, float]:
         """[TP, CP] runtime bracket with the LCD as the expected value."""
@@ -112,6 +124,9 @@ class AnalysisReport:
             "tp_block": self.tp_block,
             "cp_block": self.cp_block,
             "lcd_block": self.lcd_block,
+            "tp_balanced_block": self.tp_balanced_block,
+            "balanced_port_load": dict(self.balanced_port_load),
+            "balanced_bottleneck": self.balanced_bottleneck,
             "prediction_bracket": self.prediction_bracket(),
             "rows": [asdict(r) for r in self.rows],
             "lcd_chains": [
@@ -148,6 +163,14 @@ class AnalysisReport:
             bottleneck_port=data["bottleneck_port"],
             tp_block=data["tp_block"], cp_block=data["cp_block"],
             lcd_block=data["lcd_block"], lcd_chains=chains,
+            # v1 compatibility: before the scheduler, the uniform split was
+            # the only port model, so balanced defaults to optimistic.
+            tp_balanced_block=data.get("tp_balanced_block",
+                                       data["tp_block"]),
+            balanced_port_load=dict(data.get("balanced_port_load",
+                                             data["port_pressure"])),
+            balanced_bottleneck=data.get("balanced_bottleneck",
+                                         data["bottleneck_port"]),
             schema_version=version,
         )
 
@@ -201,6 +224,10 @@ class AnalysisReport:
             cp_block=analysis.cp.length,
             lcd_block=analysis.lcd.longest,
             lcd_chains=chains,
+            tp_balanced_block=analysis.tp.balanced_throughput,
+            balanced_port_load={p: analysis.tp.balanced_port_load.get(p, 0.0)
+                                for p in model.ports},
+            balanced_bottleneck=analysis.tp.balanced_bottleneck,
         )
 
     @classmethod
@@ -263,4 +290,8 @@ class AnalysisReport:
             cp_block=cp.seconds,
             lcd_block=longest.total_seconds if longest is not None else 0.0,
             lcd_chains=chains,
+            # Roofline terms are engine-pinned: no assignment freedom.
+            tp_balanced_block=terms.get(bottleneck, 0.0),
+            balanced_port_load=dict(terms),
+            balanced_bottleneck=bottleneck,
         )

@@ -29,6 +29,9 @@ _WIDTH = {"b": 8, "h": 16, "s": 32, "d": 64, "q": 128}
 
 _STORE_MNEMONICS = {"str", "strb", "strh", "stur", "stp", "st1", "st2"}
 _LOAD_MNEMONICS = {"ldr", "ldrb", "ldrh", "ldur", "ldp", "ld1", "ld2", "ldrsw"}
+# Loads writing *all* their register operands (pair / structure forms):
+# ``ldp x0, x1, [sp]`` defines both x0 and x1.
+_MULTI_DEST_LOADS = {"ldp", "ldnp", "ldxp", "ldaxp", "ld1", "ld2", "ld3", "ld4"}
 _BRANCH_RE = re.compile(r"^(b|br|bl|blr|cbz|cbnz|tbz|tbnz|b\.\w+|bne|beq|bgt|blt|bge|ble|bhi|bls)$")
 # Mnemonics whose first operand is *not* a destination.
 _NO_DEST = {"cmp", "cmn", "tst", "prfm", "nop"} | _STORE_MNEMONICS
@@ -39,7 +42,11 @@ def _parse_register(tok: str) -> Optional[Register]:
     m = _GPR_RE.match(tok)
     if m:
         if m.group(2) == "zr":
-            return Register(name="xzr", cls="gpr", width=64)
+            # xzr/wzr: reads-as-zero, writes discarded.  Parsed as a register
+            # (operand signatures stay stable) but excluded from dependency
+            # extraction below — the zero register never carries a value.
+            return Register(name="xzr", cls="gpr",
+                            width=64 if m.group(1) == "x" else 32)
         return Register(name=f"x{m.group(2)}", cls="gpr", width=64 if m.group(1) == "x" else 32)
     if tok == "sp":
         return Register(name="sp", cls="gpr", width=64)
@@ -61,12 +68,13 @@ def _parse_immediate(tok: str) -> Optional[Immediate]:
 
 
 def _split_operands(body: str) -> List[str]:
-    """Split an operand string on commas not inside brackets."""
+    """Split an operand string on commas not inside brackets or braces
+    (``{v0.2d, v1.2d}`` structure register lists stay one token)."""
     parts, depth, cur = [], 0, []
     for ch in body:
-        if ch == "[":
+        if ch in "[{":
             depth += 1
-        elif ch == "]":
+        elif ch in "]}":
             depth -= 1
         if ch == "," and depth == 0:
             parts.append("".join(cur).strip())
@@ -163,6 +171,15 @@ def parse_line_aarch64(line: str, line_number: int = 0) -> Optional[InstructionF
                 (stores if is_store else loads).append(mem)
             i += 1
             continue
+        if tok.startswith("{"):
+            # Structure register list: ``{v0.2d, v1.2d}`` — one register
+            # operand per listed element.
+            for sub in tok.strip("{}").split(","):
+                reg = _parse_register(sub)
+                if reg is not None:
+                    operands.append(reg)
+            i += 1
+            continue
         reg = _parse_register(tok)
         if reg is not None:
             operands.append(reg)
@@ -185,6 +202,10 @@ def parse_line_aarch64(line: str, line_number: int = 0) -> Optional[InstructionF
     regs = [op for op in operands if isinstance(op, Register)]
     if is_branch or mnemonic in _NO_DEST:
         sources.extend(r.name for r in regs)
+    elif mnemonic in _MULTI_DEST_LOADS:
+        # Pair/structure loads write every register operand, not just the
+        # first: ``ldp x0, x1, [sp]`` defines both x0 and x1.
+        dests.extend(r.name for r in regs)
     elif regs:
         dests.append(regs[0].name)
         sources.extend(r.name for r in regs[1:])
@@ -193,6 +214,11 @@ def parse_line_aarch64(line: str, line_number: int = 0) -> Optional[InstructionF
         if memref.post_index or memref.pre_index:
             if memref.base is not None:
                 dests.append(memref.base.name)
+
+    # The zero register carries no value: writes are discarded (no def, so
+    # no dependency edges hang off it) and reads are constant-zero.
+    sources = [s for s in sources if s != "xzr"]
+    dests = [d for d in dests if d != "xzr"]
 
     is_dep_breaking = any(p.match(code) for p in _ZERO_IDIOMS)
     if is_dep_breaking:

@@ -22,15 +22,21 @@ from repro.core.isa.instruction import (
 _GPR64 = {f"r{n}" for n in ("ax", "bx", "cx", "dx", "si", "di", "bp", "sp")} | {
     f"r{i}" for i in range(8, 16)
 }
+# alias -> (canonical 64-bit name, access width in bits).  Every legacy
+# sub-register names the same architectural register for dependency tracking.
 _GPR_ALIAS = {}
 for _base in ("ax", "bx", "cx", "dx", "si", "di", "bp", "sp"):
-    _GPR_ALIAS[f"e{_base}"] = f"r{_base}"
-    _GPR_ALIAS[_base] = f"r{_base}"
-_GPR_ALIAS.update({"al": "rax", "bl": "rbx", "cl": "rcx", "dl": "rdx"})
+    _GPR_ALIAS[f"e{_base}"] = (f"r{_base}", 32)
+    _GPR_ALIAS[_base] = (f"r{_base}", 16)
+for _low, _full in (("al", "rax"), ("bl", "rbx"), ("cl", "rcx"),
+                    ("dl", "rdx"), ("ah", "rax"), ("bh", "rbx"),
+                    ("ch", "rcx"), ("dh", "rdx"), ("sil", "rsi"),
+                    ("dil", "rdi"), ("bpl", "rbp"), ("spl", "rsp")):
+    _GPR_ALIAS[_low] = (_full, 8)
 for _i in range(8, 16):
-    _GPR_ALIAS[f"r{_i}d"] = f"r{_i}"
-    _GPR_ALIAS[f"r{_i}w"] = f"r{_i}"
-    _GPR_ALIAS[f"r{_i}b"] = f"r{_i}"
+    _GPR_ALIAS[f"r{_i}d"] = (f"r{_i}", 32)
+    _GPR_ALIAS[f"r{_i}w"] = (f"r{_i}", 16)
+    _GPR_ALIAS[f"r{_i}b"] = (f"r{_i}", 8)
 
 _VEC_RE = re.compile(r"^(x|y|z)mm(\d+)$")
 
@@ -54,7 +60,8 @@ def _parse_register(tok: str) -> Optional[Register]:
     if tok in _GPR64:
         return Register(name=tok, cls="gpr", width=64)
     if tok in _GPR_ALIAS:
-        return Register(name=_GPR_ALIAS[tok], cls="gpr", width=32)
+        name, width = _GPR_ALIAS[tok]
+        return Register(name=name, cls="gpr", width=width)
     if tok == "rip":
         return Register(name="rip", cls="gpr", width=64)
     return None
@@ -162,7 +169,11 @@ def parse_line_x86(line: str, line_number: int = 0) -> Optional[InstructionForm]
             if isinstance(op, Register):
                 sources.append(op.name)
             elif isinstance(op, MemoryRef):
-                loads.append(op)
+                # lea computes the effective address without touching memory:
+                # pure address arithmetic, no load µ-op, no load-latency
+                # vertex — its address registers are plain sources.
+                if not mnemonic.startswith("lea"):
+                    loads.append(op)
                 sources.extend(r.name for r in op.address_registers)
 
     is_dep_breaking = _is_zero_idiom(code)

@@ -7,58 +7,66 @@ uops.info), store data on P4 with the store AGU spread over P2/P3/P7.  The
 store node latency is the SKX store-forward latency (6 cy).  cmp/test+Jcc
 macro-fusion is modeled (fused branch issues on P6).
 
+Entries carry µ-ops with *eligible port sets* (``uops_entry``): one FP µ-op
+that may issue on P0 or P1, an ALU µ-op on any of P0/P1/P5/P6, a store split
+into its data µ-op (P4) plus its AGU µ-op (P2/P3/P7), and so on.  The derived
+``pressure`` keeps the paper's uniform split bit-identical; the min-max
+scheduler uses the port sets directly.
+
 Sources: uops.info SKX tables; Intel SOM; OSACA DB.
 """
 
 from __future__ import annotations
 
-from repro.core.machine.model import DBEntry, MachineModel, uniform
+from repro.core.machine.model import MachineModel, uops_entry
 
-_FP2 = {"P0": 0.5, "P1": 0.5}
-_ALU4 = uniform(("P0", "P1", "P5", "P6"))
-_LD = {"P2": 0.5, "P3": 0.5}
-_ST = {"P4": 1.0, "P2": 1.0 / 3, "P3": 1.0 / 3, "P7": 1.0 / 3}
+_FP2 = [(1.0, ("P0", "P1"))]
+_ALU4 = [(1.0, ("P0", "P1", "P5", "P6"))]
+_LD = [(1.0, ("P2", "P3"))]
+_ST = [(1.0, ("P4",)), (1.0, ("P2", "P3", "P7"))]  # store data + store AGU
+_LEA = [(1.0, ("P1", "P5"))]
+_BR = [(1.0, ("P6",))]
 
 _DB = {
     # AVX scalar FP: latency 4 on SKX/CLX for add/mul/FMA.
-    "vaddsd:fff": DBEntry(latency=4.0, pressure=_FP2),
-    "vsubsd:fff": DBEntry(latency=4.0, pressure=_FP2),
-    "vmulsd:fff": DBEntry(latency=4.0, pressure=_FP2),
-    "addsd:ff": DBEntry(latency=4.0, pressure=_FP2),
-    "mulsd:ff": DBEntry(latency=4.0, pressure=_FP2),
-    "vfmadd231sd:fff": DBEntry(latency=4.0, pressure=_FP2),
-    "vfmadd213sd:fff": DBEntry(latency=4.0, pressure=_FP2),
-    "vfmadd132sd:fff": DBEntry(latency=4.0, pressure=_FP2),
-    "vdivsd:fff": DBEntry(latency=14.0, pressure={"P0": 1.0, "DIV": 4.0}),
+    "vaddsd:fff": uops_entry(4.0, _FP2),
+    "vsubsd:fff": uops_entry(4.0, _FP2),
+    "vmulsd:fff": uops_entry(4.0, _FP2),
+    "addsd:ff": uops_entry(4.0, _FP2),
+    "mulsd:ff": uops_entry(4.0, _FP2),
+    "vfmadd231sd:fff": uops_entry(4.0, _FP2),
+    "vfmadd213sd:fff": uops_entry(4.0, _FP2),
+    "vfmadd132sd:fff": uops_entry(4.0, _FP2),
+    "vdivsd:fff": uops_entry(14.0, [(1.0, ("P0",)), (4.0, ("DIV",))]),
     # Moves/loads/stores.  Load-to-use 6 cy (FP domain, indexed addressing);
     # store node latency = store-forward latency 6 cy.
-    "movsd:mf": DBEntry(latency=6.0, pressure=_LD),
-    "vmovsd:mf": DBEntry(latency=6.0, pressure=_LD),
-    "movsd:fm": DBEntry(latency=6.0, pressure=_ST),
-    "vmovsd:fm": DBEntry(latency=6.0, pressure=_ST),
-    "movq:mr": DBEntry(latency=5.0, pressure=_LD),
-    "movq:rm": DBEntry(latency=6.0, pressure=_ST),
-    "movsd:ff": DBEntry(latency=1.0, pressure=_FP2),
-    "vmovsd:ff": DBEntry(latency=1.0, pressure=_FP2),
-    "movq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "movl:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "movq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "movl:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "movsd:mf": uops_entry(6.0, _LD),
+    "vmovsd:mf": uops_entry(6.0, _LD),
+    "movsd:fm": uops_entry(6.0, _ST),
+    "vmovsd:fm": uops_entry(6.0, _ST),
+    "movq:mr": uops_entry(5.0, _LD),
+    "movq:rm": uops_entry(6.0, _ST),
+    "movsd:ff": uops_entry(1.0, _FP2),
+    "vmovsd:ff": uops_entry(1.0, _FP2),
+    "movq:rr": uops_entry(1.0, _ALU4),
+    "movl:rr": uops_entry(1.0, _ALU4),
+    "movq:ir": uops_entry(1.0, _ALU4),
+    "movl:ir": uops_entry(1.0, _ALU4),
     # Integer ALU.
-    "addq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "addq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "subq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "incq:r": DBEntry(latency=1.0, pressure=_ALU4),
-    "leaq:mr": DBEntry(latency=1.0, pressure={"P1": 0.5, "P5": 0.5}),
-    "cmpq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "cmpq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "testq:rr": DBEntry(latency=1.0, pressure=_ALU4),
+    "addq:ir": uops_entry(1.0, _ALU4),
+    "addq:rr": uops_entry(1.0, _ALU4),
+    "subq:ir": uops_entry(1.0, _ALU4),
+    "incq:r": uops_entry(1.0, _ALU4),
+    "leaq:mr": uops_entry(1.0, _LEA),
+    "cmpq:rr": uops_entry(1.0, _ALU4),
+    "cmpq:ir": uops_entry(1.0, _ALU4),
+    "testq:rr": uops_entry(1.0, _ALU4),
     # Branches (unfused; the fused path is modeled via macro_fusion).
-    "jne": DBEntry(latency=1.0, pressure={"P6": 1.0}),
-    "je": DBEntry(latency=1.0, pressure={"P6": 1.0}),
-    "jb": DBEntry(latency=1.0, pressure={"P6": 1.0}),
-    "jmp": DBEntry(latency=1.0, pressure={"P6": 1.0}),
-    "nop": DBEntry(latency=0.0, pressure={}),
+    "jne": uops_entry(1.0, _BR),
+    "je": uops_entry(1.0, _BR),
+    "jb": uops_entry(1.0, _BR),
+    "jmp": uops_entry(1.0, _BR),
+    "nop": uops_entry(0.0, []),
 }
 
 
@@ -68,8 +76,8 @@ def cascade_lake() -> MachineModel:
         isa="x86",
         ports=("P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7", "DIV"),
         db=dict(_DB),
-        load_entry=DBEntry(latency=6.0, pressure=_LD, note="split load µ-op"),
-        store_entry=DBEntry(latency=6.0, pressure=_ST, note="split store µ-op"),
+        load_entry=uops_entry(6.0, _LD, note="split load µ-op"),
+        store_entry=uops_entry(6.0, _ST, note="split store µ-op"),
         macro_fusion=True,
         fused_branch_pressure={"P6": 1.0},
         frequency_ghz=2.5,

@@ -32,9 +32,23 @@ def uniform(ports: Tuple[str, ...], inverse_throughput: float = 1.0) -> Dict[str
     return {p: share for p in ports}
 
 
+#: One µ-op: ``(cycles, eligible ports)`` — ``cycles`` of work that may be
+#: scheduled fractionally across any of the named ports.
+Uop = Tuple[float, Tuple[str, ...]]
+
+
 @dataclass(frozen=True)
 class DBEntry:
-    """Instruction-database record for one instruction form."""
+    """Instruction-database record for one instruction form.
+
+    ``pressure`` is the paper's fixed-probability per-port split (the
+    *optimistic* uniform model).  ``uops``, when present, is the richer form:
+    the instruction's µ-ops with their *eligible port sets*, which the
+    min-max scheduler (:mod:`repro.core.analysis.scheduler`) assigns
+    kernel-globally.  Entries without ``uops`` (pre-baked per-port floats)
+    are treated as already assigned: each ``pressure`` item is pinned to its
+    port, so the balanced bound degenerates to the optimistic one.
+    """
 
     latency: float
     pressure: Mapping[str, float]
@@ -42,6 +56,7 @@ class DBEntry:
     # encodes it).  Defaults to the pressure sum.
     throughput: Optional[float] = None
     note: str = ""
+    uops: Optional[Tuple[Uop, ...]] = None
 
     @property
     def inverse_throughput(self) -> float:
@@ -53,7 +68,41 @@ class DBEntry:
         pressure = dict(self.pressure)
         for port, cy in other.pressure.items():
             pressure[port] = pressure.get(port, 0.0) + cy
-        return DBEntry(latency=self.latency, pressure=pressure, note=note)
+        uops = None
+        if self.uops is not None or other.uops is not None:
+            uops = (pressure_uops(self.pressure) if self.uops is None
+                    else self.uops)
+            uops += (pressure_uops(other.pressure) if other.uops is None
+                     else other.uops)
+        return DBEntry(latency=self.latency, pressure=pressure, note=note,
+                       uops=uops)
+
+
+def pressure_uops(pressure: Mapping[str, float]) -> Tuple[Uop, ...]:
+    """Pre-baked per-port floats as already-assigned (single-port) µ-ops."""
+    return tuple((cy, (port,)) for port, cy in pressure.items() if cy)
+
+
+def uops_entry(latency: float, uops, throughput: Optional[float] = None,
+               note: str = "") -> DBEntry:
+    """Build a :class:`DBEntry` from µ-ops with eligible port sets.
+
+    The uniform-split ``pressure`` is derived (``cycles / len(ports)`` on each
+    eligible port), so an entry converted from ``uniform()`` form keeps its
+    optimistic per-port numbers bit-identical.
+    """
+    norm: list = []
+    pressure: Dict[str, float] = {}
+    for cycles, ports in uops:
+        ports = tuple(ports)
+        if not ports:
+            raise ValueError("µ-op with empty eligible port set")
+        norm.append((float(cycles), ports))
+        share = float(cycles) / len(ports)
+        for p in ports:
+            pressure[p] = pressure.get(p, 0.0) + share
+    return DBEntry(latency=latency, pressure=pressure, throughput=throughput,
+                   note=note, uops=tuple(norm))
 
 
 @dataclass

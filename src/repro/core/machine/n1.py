@@ -4,44 +4,48 @@ From the Arm Neoverse N1 Software Optimization Guide: two FP/ASIMD pipes
 (V0/V1), FADD latency 2, FMUL latency 3, FMADD 4; three integer ALUs (one
 branch+ALU); two load/store pipes, load-to-use 4, store-forward 4.
 Demonstrates the declarative machine-model claim on a post-paper core.
+
+Entries carry µ-ops with *eligible port sets* (``uops_entry``); the derived
+``pressure`` keeps the uniform split bit-identical.
 """
 
 from __future__ import annotations
 
-from repro.core.machine.model import DBEntry, MachineModel, uniform
+from repro.core.machine.model import MachineModel, uops_entry
 
-_FP2 = {"V0": 0.5, "V1": 0.5}
-_ALU3 = uniform(("I0", "I1", "I2"))
-_LD = {"L0": 0.5, "L1": 0.5}
-_ST = {"L0": 0.5, "L1": 0.5, "SD": 1.0}
+_FP2 = [(1.0, ("V0", "V1"))]
+_ALU3 = [(1.0, ("I0", "I1", "I2"))]
+_LD = [(1.0, ("L0", "L1"))]
+_ST = [(1.0, ("L0", "L1")), (1.0, ("SD",))]  # store AGU + store data
+_BR = [(1.0, ("B",))]
 
 _DB = {
-    "fadd:fff": DBEntry(latency=2.0, pressure=_FP2),
-    "fsub:fff": DBEntry(latency=2.0, pressure=_FP2),
-    "fmul:fff": DBEntry(latency=3.0, pressure=_FP2),
-    "fmadd:ffff": DBEntry(latency=4.0, pressure=_FP2),
-    "fmov:ff": DBEntry(latency=1.0, pressure=_FP2),
-    "fdiv:fff": DBEntry(latency=15.0, pressure={"V0": 1.0, "DIV": 7.0}),
-    "ldr:fm": DBEntry(latency=4.0, pressure=_LD),
-    "ldr:rm": DBEntry(latency=4.0, pressure=_LD),
-    "ldp:ffm": DBEntry(latency=4.0, pressure=_LD),
-    "str:fm": DBEntry(latency=4.0, pressure=_ST),
-    "str:rm": DBEntry(latency=4.0, pressure=_ST),
-    "add:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "add:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "sub:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "subs:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "adds:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "mov:rr": DBEntry(latency=1.0, pressure=_ALU3),
-    "mov:ri": DBEntry(latency=1.0, pressure=_ALU3),
-    "cmp:rr": DBEntry(latency=1.0, pressure=_ALU3),
-    "cmp:ri": DBEntry(latency=1.0, pressure=_ALU3),
-    "eor:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "b": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "bne": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "beq": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "cbnz": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "nop": DBEntry(latency=0.0, pressure={}),
+    "fadd:fff": uops_entry(2.0, _FP2),
+    "fsub:fff": uops_entry(2.0, _FP2),
+    "fmul:fff": uops_entry(3.0, _FP2),
+    "fmadd:ffff": uops_entry(4.0, _FP2),
+    "fmov:ff": uops_entry(1.0, _FP2),
+    "fdiv:fff": uops_entry(15.0, [(1.0, ("V0",)), (7.0, ("DIV",))]),
+    "ldr:fm": uops_entry(4.0, _LD),
+    "ldr:rm": uops_entry(4.0, _LD),
+    "ldp:ffm": uops_entry(4.0, _LD),
+    "str:fm": uops_entry(4.0, _ST),
+    "str:rm": uops_entry(4.0, _ST),
+    "add:rri": uops_entry(1.0, _ALU3),
+    "add:rrr": uops_entry(1.0, _ALU3),
+    "sub:rri": uops_entry(1.0, _ALU3),
+    "subs:rri": uops_entry(1.0, _ALU3),
+    "adds:rri": uops_entry(1.0, _ALU3),
+    "mov:rr": uops_entry(1.0, _ALU3),
+    "mov:ri": uops_entry(1.0, _ALU3),
+    "cmp:rr": uops_entry(1.0, _ALU3),
+    "cmp:ri": uops_entry(1.0, _ALU3),
+    "eor:rrr": uops_entry(1.0, _ALU3),
+    "b": uops_entry(1.0, _BR),
+    "bne": uops_entry(1.0, _BR),
+    "beq": uops_entry(1.0, _BR),
+    "cbnz": uops_entry(1.0, _BR),
+    "nop": uops_entry(0.0, []),
 }
 
 
@@ -51,8 +55,8 @@ def neoverse_n1() -> MachineModel:
         isa="aarch64",
         ports=("I0", "I1", "I2", "V0", "V1", "L0", "L1", "SD", "DIV", "B"),
         db=dict(_DB),
-        load_entry=DBEntry(latency=4.0, pressure=_LD, note="split load µ-op"),
-        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        load_entry=uops_entry(4.0, _LD, note="split load µ-op"),
+        store_entry=uops_entry(4.0, _ST, note="split store µ-op"),
         macro_fusion=False,
         frequency_ghz=2.5,
     )

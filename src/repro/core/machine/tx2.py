@@ -7,51 +7,57 @@ load/store AGUs (load-to-use 4 cy), and stores additionally occupy the store
 buffer port P5 for one cycle.  Values from the Vulcan micro-architecture
 disclosures and the OSACA instruction database (semi-automatic ibench runs in
 the paper's artifact).
+
+Entries carry µ-ops with *eligible port sets* (``uops_entry``): the derived
+``pressure`` keeps the paper's uniform split bit-identical (Table II), while
+the min-max scheduler may e.g. push all integer ALU work onto P2 when P0/P1
+are saturated by FP.
 """
 
 from __future__ import annotations
 
-from repro.core.machine.model import DBEntry, MachineModel, uniform
+from repro.core.machine.model import MachineModel, uops_entry
 
-_FP2 = {"P0": 0.5, "P1": 0.5}
-_ALU3 = uniform(("P0", "P1", "P2"))
-_LD = {"P3": 0.5, "P4": 0.5}
-_ST = {"P3": 0.5, "P4": 0.5, "P5": 1.0}
+_FP2 = [(1.0, ("P0", "P1"))]
+_ALU3 = [(1.0, ("P0", "P1", "P2"))]
+_LD = [(1.0, ("P3", "P4"))]
+_ST = [(1.0, ("P3", "P4")), (1.0, ("P5",))]  # store AGU + store buffer
+_BR = [(1.0, ("B",))]
 
 _DB = {
     # Scalar FP (d-form NEON scalar): latency 6, tput 0.5/port over P0,P1.
-    "fadd:fff": DBEntry(latency=6.0, pressure=_FP2),
-    "fsub:fff": DBEntry(latency=6.0, pressure=_FP2),
-    "fmul:fff": DBEntry(latency=6.0, pressure=_FP2),
-    "fmadd:ffff": DBEntry(latency=6.0, pressure=_FP2),
-    "fmov:ff": DBEntry(latency=1.0, pressure=_FP2),
-    "fdiv:fff": DBEntry(latency=23.0, pressure={"P0": 1.0, "DIV": 16.0}),
+    "fadd:fff": uops_entry(6.0, _FP2),
+    "fsub:fff": uops_entry(6.0, _FP2),
+    "fmul:fff": uops_entry(6.0, _FP2),
+    "fmadd:ffff": uops_entry(6.0, _FP2),
+    "fmov:ff": uops_entry(1.0, _FP2),
+    "fdiv:fff": uops_entry(23.0, [(1.0, ("P0",)), (16.0, ("DIV",))]),
     # Loads/stores: load-to-use 4 cy, AGUs on P3/P4; store data port P5.
-    "ldr:fm": DBEntry(latency=4.0, pressure=_LD),
-    "ldr:rm": DBEntry(latency=4.0, pressure=_LD),
-    "ldp:ffm": DBEntry(latency=4.0, pressure=_LD),
-    "str:fm": DBEntry(latency=4.0, pressure=_ST),
-    "str:rm": DBEntry(latency=4.0, pressure=_ST),
+    "ldr:fm": uops_entry(4.0, _LD),
+    "ldr:rm": uops_entry(4.0, _LD),
+    "ldp:ffm": uops_entry(4.0, _LD),
+    "str:fm": uops_entry(4.0, _ST),
+    "str:rm": uops_entry(4.0, _ST),
     # Integer ALU.
-    "add:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "add:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "sub:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "sub:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "mov:rr": DBEntry(latency=1.0, pressure={"P0": 0.5, "P1": 0.5}),
-    "mov:ri": DBEntry(latency=1.0, pressure={"P0": 0.5, "P1": 0.5}),
-    "cmp:rr": DBEntry(latency=1.0, pressure=_ALU3),
-    "cmp:ri": DBEntry(latency=1.0, pressure=_ALU3),
-    "eor:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "orr:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "and:rrr": DBEntry(latency=1.0, pressure=_ALU3),
-    "lsl:rri": DBEntry(latency=1.0, pressure=_ALU3),
-    "madd:rrrr": DBEntry(latency=3.0, pressure={"P0": 1.0}),
+    "add:rri": uops_entry(1.0, _ALU3),
+    "add:rrr": uops_entry(1.0, _ALU3),
+    "sub:rri": uops_entry(1.0, _ALU3),
+    "sub:rrr": uops_entry(1.0, _ALU3),
+    "mov:rr": uops_entry(1.0, _FP2),
+    "mov:ri": uops_entry(1.0, _FP2),
+    "cmp:rr": uops_entry(1.0, _ALU3),
+    "cmp:ri": uops_entry(1.0, _ALU3),
+    "eor:rrr": uops_entry(1.0, _ALU3),
+    "orr:rrr": uops_entry(1.0, _ALU3),
+    "and:rrr": uops_entry(1.0, _ALU3),
+    "lsl:rri": uops_entry(1.0, _ALU3),
+    "madd:rrrr": uops_entry(3.0, [(1.0, ("P0",))]),
     # Branch unit.
-    "b": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "bne": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "beq": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "cbnz": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "nop": DBEntry(latency=0.0, pressure={}),
+    "b": uops_entry(1.0, _BR),
+    "bne": uops_entry(1.0, _BR),
+    "beq": uops_entry(1.0, _BR),
+    "cbnz": uops_entry(1.0, _BR),
+    "nop": uops_entry(0.0, []),
 }
 
 
@@ -61,8 +67,8 @@ def thunderx2() -> MachineModel:
         isa="aarch64",
         ports=("P0", "P1", "P2", "P3", "P4", "P5", "DIV", "B"),
         db=dict(_DB),
-        load_entry=DBEntry(latency=4.0, pressure=_LD, note="split load µ-op"),
-        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        load_entry=uops_entry(4.0, _LD, note="split load µ-op"),
+        store_entry=uops_entry(4.0, _ST, note="split store µ-op"),
         macro_fusion=False,
         frequency_ghz=2.2,
     )

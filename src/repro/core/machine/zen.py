@@ -5,48 +5,54 @@ four FP pipes (FADD on FP2/FP3 latency 3, FMUL on FP0/FP1 latency 4 — Agner
 Fog's Zen tables), a store-data path (SD), and a branch unit.  FP-domain
 load-to-use is 7 cy; the store node latency is the Zen store-forward latency
 (4 cy).  cmp+Jcc fusion is supported on Zen.
+
+Entries carry µ-ops with *eligible port sets* (``uops_entry``); the derived
+``pressure`` keeps the uniform split bit-identical while the min-max
+scheduler assigns loads/stores across the shared AGU pair optimally.
 """
 
 from __future__ import annotations
 
-from repro.core.machine.model import DBEntry, MachineModel, uniform
+from repro.core.machine.model import MachineModel, uops_entry
 
-_FADD = {"FP2": 0.5, "FP3": 0.5}
-_FMUL = {"FP0": 0.5, "FP1": 0.5}
-_ALU4 = uniform(("ALU0", "ALU1", "ALU2", "ALU3"))
-_AGU = {"AGU0": 0.5, "AGU1": 0.5}
-_ST = {"AGU0": 0.5, "AGU1": 0.5, "SD": 1.0}
+_FADD = [(1.0, ("FP2", "FP3"))]
+_FMUL = [(1.0, ("FP0", "FP1"))]
+_FMOV = [(1.0, ("FP0", "FP1", "FP2", "FP3"))]
+_ALU4 = [(1.0, ("ALU0", "ALU1", "ALU2", "ALU3"))]
+_AGU = [(1.0, ("AGU0", "AGU1"))]
+_ST = [(1.0, ("AGU0", "AGU1")), (1.0, ("SD",))]  # store AGU + store data
+_BR = [(1.0, ("B",))]
 
 _DB = {
-    "vaddsd:fff": DBEntry(latency=3.0, pressure=_FADD),
-    "vsubsd:fff": DBEntry(latency=3.0, pressure=_FADD),
-    "vmulsd:fff": DBEntry(latency=4.0, pressure=_FMUL),
-    "addsd:ff": DBEntry(latency=3.0, pressure=_FADD),
-    "mulsd:ff": DBEntry(latency=4.0, pressure=_FMUL),
-    "vfmadd231sd:fff": DBEntry(latency=5.0, pressure=_FMUL),
-    "vfmadd213sd:fff": DBEntry(latency=5.0, pressure=_FMUL),
-    "vdivsd:fff": DBEntry(latency=13.0, pressure={"FP3": 1.0, "DIV": 4.0}),
+    "vaddsd:fff": uops_entry(3.0, _FADD),
+    "vsubsd:fff": uops_entry(3.0, _FADD),
+    "vmulsd:fff": uops_entry(4.0, _FMUL),
+    "addsd:ff": uops_entry(3.0, _FADD),
+    "mulsd:ff": uops_entry(4.0, _FMUL),
+    "vfmadd231sd:fff": uops_entry(5.0, _FMUL),
+    "vfmadd213sd:fff": uops_entry(5.0, _FMUL),
+    "vdivsd:fff": uops_entry(13.0, [(1.0, ("FP3",)), (4.0, ("DIV",))]),
     # Memory.
-    "movsd:mf": DBEntry(latency=7.0, pressure=_AGU),
-    "vmovsd:mf": DBEntry(latency=7.0, pressure=_AGU),
-    "movsd:fm": DBEntry(latency=4.0, pressure=_ST),
-    "vmovsd:fm": DBEntry(latency=4.0, pressure=_ST),
-    "movq:mr": DBEntry(latency=4.0, pressure=_AGU),
-    "movq:rm": DBEntry(latency=4.0, pressure=_ST),
-    "movsd:ff": DBEntry(latency=1.0, pressure={"FP0": 0.25, "FP1": 0.25, "FP2": 0.25, "FP3": 0.25}),
-    "movq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "movq:ir": DBEntry(latency=1.0, pressure=_ALU4),
+    "movsd:mf": uops_entry(7.0, _AGU),
+    "vmovsd:mf": uops_entry(7.0, _AGU),
+    "movsd:fm": uops_entry(4.0, _ST),
+    "vmovsd:fm": uops_entry(4.0, _ST),
+    "movq:mr": uops_entry(4.0, _AGU),
+    "movq:rm": uops_entry(4.0, _ST),
+    "movsd:ff": uops_entry(1.0, _FMOV),
+    "movq:rr": uops_entry(1.0, _ALU4),
+    "movq:ir": uops_entry(1.0, _ALU4),
     # Integer ALU.
-    "addq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "addq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "subq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "leaq:mr": DBEntry(latency=1.0, pressure=_ALU4),
-    "cmpq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "cmpq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "jne": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "je": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "jmp": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "nop": DBEntry(latency=0.0, pressure={}),
+    "addq:ir": uops_entry(1.0, _ALU4),
+    "addq:rr": uops_entry(1.0, _ALU4),
+    "subq:ir": uops_entry(1.0, _ALU4),
+    "leaq:mr": uops_entry(1.0, _ALU4),
+    "cmpq:rr": uops_entry(1.0, _ALU4),
+    "cmpq:ir": uops_entry(1.0, _ALU4),
+    "jne": uops_entry(1.0, _BR),
+    "je": uops_entry(1.0, _BR),
+    "jmp": uops_entry(1.0, _BR),
+    "nop": uops_entry(0.0, []),
 }
 
 
@@ -57,8 +63,8 @@ def zen() -> MachineModel:
         ports=("ALU0", "ALU1", "ALU2", "ALU3", "AGU0", "AGU1",
                "FP0", "FP1", "FP2", "FP3", "SD", "DIV", "B"),
         db=dict(_DB),
-        load_entry=DBEntry(latency=7.0, pressure=_AGU, note="split load µ-op"),
-        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        load_entry=uops_entry(7.0, _AGU, note="split load µ-op"),
+        store_entry=uops_entry(4.0, _ST, note="split store µ-op"),
         macro_fusion=True,
         fused_branch_pressure={"B": 1.0},
         frequency_ghz=2.3,

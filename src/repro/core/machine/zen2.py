@@ -3,49 +3,53 @@
 Zen 2 vs Zen 1 (Agner Fog's tables / AMD SOG): 256-bit FP datapaths, FADD
 latency 3 on FP2/FP3, FMUL/FMA latency 3 on FP0/FP1 (down from 4/5), three
 AGUs (two loads + one store per cycle), FP load-to-use 7, store-forward 4.
+
+Entries carry µ-ops with *eligible port sets* (``uops_entry``); the derived
+``pressure`` keeps the uniform split bit-identical.
 """
 
 from __future__ import annotations
 
-from repro.core.machine.model import DBEntry, MachineModel, uniform
+from repro.core.machine.model import MachineModel, uops_entry
 
-_FADD = {"FP2": 0.5, "FP3": 0.5}
-_FMUL = {"FP0": 0.5, "FP1": 0.5}
-_ALU4 = uniform(("ALU0", "ALU1", "ALU2", "ALU3"))
-_LD = {"AGU0": 0.5, "AGU1": 0.5}
-_ST = {"AGU2": 1.0, "SD": 1.0}
+_FADD = [(1.0, ("FP2", "FP3"))]
+_FMUL = [(1.0, ("FP0", "FP1"))]
+_FMOV = [(1.0, ("FP0", "FP1", "FP2", "FP3"))]
+_ALU4 = [(1.0, ("ALU0", "ALU1", "ALU2", "ALU3"))]
+_LD = [(1.0, ("AGU0", "AGU1"))]
+_ST = [(1.0, ("AGU2",)), (1.0, ("SD",))]  # dedicated store AGU + store data
+_BR = [(1.0, ("B",))]
 
 _DB = {
-    "vaddsd:fff": DBEntry(latency=3.0, pressure=_FADD),
-    "vsubsd:fff": DBEntry(latency=3.0, pressure=_FADD),
-    "vmulsd:fff": DBEntry(latency=3.0, pressure=_FMUL),
-    "vfmadd231sd:fff": DBEntry(latency=5.0, pressure=_FMUL),
-    "vfmadd213sd:fff": DBEntry(latency=5.0, pressure=_FMUL),
-    "vaddpd:fff": DBEntry(latency=3.0, pressure=_FADD),
-    "vmulpd:fff": DBEntry(latency=3.0, pressure=_FMUL),
-    "vfmadd231pd:fff": DBEntry(latency=5.0, pressure=_FMUL),
-    "vdivsd:fff": DBEntry(latency=13.0, pressure={"FP3": 1.0, "DIV": 4.0}),
-    "movsd:mf": DBEntry(latency=7.0, pressure=_LD),
-    "vmovsd:mf": DBEntry(latency=7.0, pressure=_LD),
-    "vmovupd:mf": DBEntry(latency=7.0, pressure=_LD),
-    "movsd:fm": DBEntry(latency=4.0, pressure=_ST),
-    "vmovsd:fm": DBEntry(latency=4.0, pressure=_ST),
-    "vmovupd:fm": DBEntry(latency=4.0, pressure=_ST),
-    "movq:mr": DBEntry(latency=4.0, pressure=_LD),
-    "movq:rm": DBEntry(latency=4.0, pressure=_ST),
-    "movsd:ff": DBEntry(latency=1.0, pressure={"FP0": 0.25, "FP1": 0.25,
-                                               "FP2": 0.25, "FP3": 0.25}),
-    "movq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "addq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "addq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "subq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "leaq:mr": DBEntry(latency=1.0, pressure=_ALU4),
-    "cmpq:rr": DBEntry(latency=1.0, pressure=_ALU4),
-    "cmpq:ir": DBEntry(latency=1.0, pressure=_ALU4),
-    "jne": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "je": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "jmp": DBEntry(latency=1.0, pressure={"B": 1.0}),
-    "nop": DBEntry(latency=0.0, pressure={}),
+    "vaddsd:fff": uops_entry(3.0, _FADD),
+    "vsubsd:fff": uops_entry(3.0, _FADD),
+    "vmulsd:fff": uops_entry(3.0, _FMUL),
+    "vfmadd231sd:fff": uops_entry(5.0, _FMUL),
+    "vfmadd213sd:fff": uops_entry(5.0, _FMUL),
+    "vaddpd:fff": uops_entry(3.0, _FADD),
+    "vmulpd:fff": uops_entry(3.0, _FMUL),
+    "vfmadd231pd:fff": uops_entry(5.0, _FMUL),
+    "vdivsd:fff": uops_entry(13.0, [(1.0, ("FP3",)), (4.0, ("DIV",))]),
+    "movsd:mf": uops_entry(7.0, _LD),
+    "vmovsd:mf": uops_entry(7.0, _LD),
+    "vmovupd:mf": uops_entry(7.0, _LD),
+    "movsd:fm": uops_entry(4.0, _ST),
+    "vmovsd:fm": uops_entry(4.0, _ST),
+    "vmovupd:fm": uops_entry(4.0, _ST),
+    "movq:mr": uops_entry(4.0, _LD),
+    "movq:rm": uops_entry(4.0, _ST),
+    "movsd:ff": uops_entry(1.0, _FMOV),
+    "movq:rr": uops_entry(1.0, _ALU4),
+    "addq:ir": uops_entry(1.0, _ALU4),
+    "addq:rr": uops_entry(1.0, _ALU4),
+    "subq:ir": uops_entry(1.0, _ALU4),
+    "leaq:mr": uops_entry(1.0, _ALU4),
+    "cmpq:rr": uops_entry(1.0, _ALU4),
+    "cmpq:ir": uops_entry(1.0, _ALU4),
+    "jne": uops_entry(1.0, _BR),
+    "je": uops_entry(1.0, _BR),
+    "jmp": uops_entry(1.0, _BR),
+    "nop": uops_entry(0.0, []),
 }
 
 
@@ -56,8 +60,8 @@ def zen2() -> MachineModel:
         ports=("ALU0", "ALU1", "ALU2", "ALU3", "AGU0", "AGU1", "AGU2",
                "FP0", "FP1", "FP2", "FP3", "SD", "DIV", "B"),
         db=dict(_DB),
-        load_entry=DBEntry(latency=7.0, pressure=_LD, note="split load µ-op"),
-        store_entry=DBEntry(latency=4.0, pressure=_ST, note="split store µ-op"),
+        load_entry=uops_entry(7.0, _LD, note="split load µ-op"),
+        store_entry=uops_entry(4.0, _ST, note="split store µ-op"),
         macro_fusion=True,
         fused_branch_pressure={"B": 1.0},
         frequency_ghz=3.4,

@@ -54,6 +54,51 @@ def test_a64_negative_offset():
     assert f.stores[0].offset == -24
 
 
+def test_a64_ldp_writes_both_registers():
+    f = parse_line_aarch64("ldp x0, x1, [sp]")
+    assert f.dest_registers == ("x0", "x1")
+    assert "x1" not in f.source_registers  # x1 is a dest, not a source
+    assert f.source_registers == ("sp",)
+    assert f.loads
+
+
+def test_a64_ldp_post_index_writeback():
+    f = parse_line_aarch64("ldp d0, d1, [x2], 16")
+    assert f.dest_registers == ("v0", "v1", "x2")
+    assert f.loads[0].post_index
+
+
+def test_a64_ld2_structure_list_dests():
+    f = parse_line_aarch64("ld2 {v0.2d, v1.2d}, [x0]")
+    assert f.dest_registers == ("v0", "v1")
+    assert f.source_registers == ("x0",)
+    assert f.operand_signature() == "vvm"
+
+
+def test_a64_zero_register_no_dependencies():
+    # Reads of xzr/wzr are constant zero, not register sources.
+    f = parse_line_aarch64("mov x3, xzr")
+    assert f.dest_registers == ("x3",)
+    assert f.source_registers == ()
+    # Writes to the zero register are discarded: no def, no edges.
+    f = parse_line_aarch64("subs wzr, x1, x2")  # cmp alias
+    assert f.dest_registers == ()
+    assert set(f.source_registers) == {"x1", "x2"}
+    # Still parsed as a register so DB signatures stay stable.
+    assert f.operand_signature() == "rrr"
+
+
+def test_a64_zero_register_breaks_dag_chains():
+    from repro.core.analysis import build_dag
+    from repro.core.machine import thunderx2
+
+    kernel = parse_aarch64(
+        "# OSACA-BEGIN\nadd xzr, x1, x2\nadd x3, xzr, x4\n# OSACA-END")
+    dag = build_dag(kernel, thunderx2())
+    # No def-use edge flows through the zero register.
+    assert all(not preds for preds in dag.preds)
+
+
 # -- x86 ----------------------------------------------------------------------
 
 
@@ -108,6 +153,47 @@ def test_x86_zero_idiom():
 def test_x86_ymm_aliases_xmm():
     f = parse_line_x86("vaddpd %ymm1, %ymm2, %ymm3")
     assert f.dest_registers == ("xmm3",)
+
+
+def test_x86_lea_is_not_a_load():
+    f = parse_line_x86("leaq 8(%rax,%rbx,4), %rcx")
+    assert f.loads == ()  # pure address arithmetic: no load µ-op
+    assert f.dest_registers == ("rcx",)
+    assert set(f.source_registers) == {"rax", "rbx"}
+    assert f.operand_signature() == "mr"  # DB keys (leaq:mr) unchanged
+
+
+def test_x86_lea_no_phantom_load_vertex():
+    from repro.core.analysis import build_dag
+    from repro.core.machine import cascade_lake
+
+    asm = ("# OSACA-BEGIN\nleaq (%rax,%rbx,8), %rcx\n"
+           "addq %rcx, %rdx\n# OSACA-END")
+    dag = build_dag(parse_x86(asm), cascade_lake())
+    assert [n.kind for n in dag.nodes] == ["instr", "instr"]
+    # lea -> add dependency flows through rcx with lea's 1-cycle latency.
+    assert dag.preds[1] == [0]
+    assert dag.nodes[0].latency == 1.0
+
+
+def test_x86_byte_register_aliases():
+    # sil/dil/bpl/spl used to fall through to Label, losing dependencies.
+    f = parse_line_x86("movb %sil, %dil")
+    assert f.dest_registers == ("rdi",)
+    assert f.source_registers == ("rsi",)
+    assert [op.width for op in f.operands] == [8, 8]
+    f = parse_line_x86("addb %bpl, %spl")
+    assert f.dest_registers == ("rsp",)
+    assert set(f.source_registers) == {"rbp", "rsp"}  # RMW reads dest
+
+
+def test_x86_subregister_widths():
+    assert [op.width for op in parse_line_x86("movb %al, %bl").operands] == [8, 8]
+    assert [op.width for op in parse_line_x86("movw %ax, %bx").operands] == [16, 16]
+    assert [op.width for op in parse_line_x86("movl %eax, %edx").operands] == [32, 32]
+    assert [op.width for op in parse_line_x86("movq %rax, %rdx").operands] == [64, 64]
+    f = parse_line_x86("movw %r8w, %r9w")
+    assert f.dest_registers == ("r9",) and f.operands[0].width == 16
 
 
 # -- marker extraction ---------------------------------------------------------

@@ -1,0 +1,210 @@
+"""Min-max port-assignment scheduler: differential tests against the
+brute-force enumeration oracle (and scipy's LP when present), bound ordering
+on the example kernels, and the explicit-per-port equivalence guarantee."""
+
+import random
+
+import pytest
+
+from repro.core import analyze_kernel, cascade_lake, parse_aarch64, parse_x86, thunderx2, zen
+from repro.core.analysis import AnalysisReport
+from repro.core.analysis.scheduler import (balance_from_costs,
+                                           brute_force_min_max,
+                                           gather_classes, linprog_min_max,
+                                           min_max_load)
+from repro.core.machine import DBEntry, MachineModel, neoverse_n1, uops_entry, zen2
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM
+
+ALL_MODELS = [thunderx2, cascade_lake, zen, zen2, neoverse_n1]
+
+EXAMPLE_KERNELS = [
+    (GS_TX2_ASM, parse_aarch64, thunderx2),
+    (GS_TX2_ASM, parse_aarch64, neoverse_n1),
+    (GS_CLX_ASM, parse_x86, cascade_lake),
+    (GS_ZEN_ASM, parse_x86, zen),
+    (GS_ZEN_ASM, parse_x86, zen2),
+]
+
+
+# -- bound structure on the example kernels -----------------------------------
+
+
+@pytest.mark.parametrize("asm,parse,mk", EXAMPLE_KERNELS)
+def test_balanced_between_pinned_max_and_optimistic(asm, parse, mk):
+    """max single-port pinned load <= balanced <= optimistic, everywhere."""
+    model = mk()
+    analysis = analyze_kernel(parse(asm, name="gs"), model, unroll=4)
+    tp = analysis.tp
+    assert tp.balanced_throughput <= tp.block_throughput + 1e-12
+    classes = gather_classes(model.resolve_kernel(analysis.kernel))
+    pinned_max = max((cy for eligible, cy in classes.items()
+                      if len(eligible) == 1), default=0.0)
+    assert tp.balanced_throughput >= pinned_max - 1e-12
+    # Total work is conserved by the assignment.
+    assert sum(tp.balanced_port_load.values()) == \
+        pytest.approx(sum(tp.port_pressure.values()))
+    # The bound is the max of the per-port loads it reports.
+    assert tp.balanced_throughput == \
+        pytest.approx(max(tp.balanced_port_load.values()))
+
+
+@pytest.mark.parametrize("asm,parse,mk", EXAMPLE_KERNELS)
+def test_balanced_matches_oracle_on_example_kernels(asm, parse, mk):
+    model = mk()
+    costs = model.resolve_kernel(parse(asm, name="gs"))
+    schedule = balance_from_costs(costs, model.ports)
+    oracle = brute_force_min_max(gather_classes(costs))
+    assert schedule.bound == pytest.approx(oracle, abs=1e-9)
+
+
+def test_tx2_balanced_shifts_alu_work_off_fp_ports():
+    """The headline effect: TX2 integer ALU µ-ops (P0/P1/P2) escape to P2
+    when P0/P1 are saturated by FP — uniform splitting cannot see this."""
+    model = thunderx2()
+    analysis = analyze_kernel(parse_aarch64(GS_TX2_ASM, name="gs"), model,
+                              unroll=4)
+    assert analysis.tp_per_it == pytest.approx(2.458, abs=5e-3)
+    assert analysis.tp_balanced_per_it == pytest.approx(2.125, abs=1e-9)
+    load = analysis.tp.balanced_port_load
+    assert load["P2"] == pytest.approx(4.0)  # all 4 ALU µ-ops pushed to P2
+    assert load["P0"] == load["P1"] == pytest.approx(8.5)
+
+
+# -- differential: randomized instances vs. the oracle ------------------------
+
+
+def _random_classes(rng, n_ports, n_classes):
+    ports = [f"P{i}" for i in range(n_ports)]
+    classes = {}
+    for _ in range(n_classes):
+        k = rng.randint(1, n_ports)
+        eligible = frozenset(rng.sample(ports, k))
+        classes[eligible] = classes.get(eligible, 0.0) + rng.randint(1, 8) / 2
+    return ports, classes
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_min_max_load_matches_oracle_randomized(seed):
+    rng = random.Random(seed)
+    ports, classes = _random_classes(rng, rng.randint(2, 7), rng.randint(1, 9))
+    schedule = min_max_load(classes, ports)
+    assert schedule.bound == pytest.approx(brute_force_min_max(classes),
+                                           abs=1e-9)
+    # Per-port loads are a certificate: conserve work, never exceed the bound.
+    assert sum(schedule.port_load.values()) == \
+        pytest.approx(sum(classes.values()))
+    assert max(schedule.port_load.values()) == pytest.approx(schedule.bound)
+    # Water levels are non-increasing, outermost peel first.
+    levels = [lv for lv, _ in schedule.levels]
+    assert levels == sorted(levels, reverse=True)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_min_max_load_matches_lp_randomized(seed):
+    lp = linprog_min_max({frozenset(("A",)): 1.0})
+    if lp is None:
+        pytest.skip("scipy not available")
+    rng = random.Random(1000 + seed)
+    ports, classes = _random_classes(rng, rng.randint(2, 6), rng.randint(1, 7))
+    schedule = min_max_load(classes, ports)
+    assert schedule.bound == pytest.approx(linprog_min_max(classes), abs=1e-6)
+
+
+def test_random_small_kernels_match_oracle():
+    """Randomized small *kernels* end-to-end: parse -> resolve -> balance."""
+    model = thunderx2()
+    rng = random.Random(7)
+    ops = ["fadd d{a}, d{b}, d{c}", "fmul d{a}, d{b}, d{c}",
+           "add x{a}, x{b}, 8", "ldr d{a}, [x{b}, 8]",
+           "str d{a}, [x{b}], 8", "cmp x{a}, x{b}"]
+    for _ in range(15):
+        lines = [rng.choice(ops).format(a=rng.randint(0, 7),
+                                        b=rng.randint(0, 7),
+                                        c=rng.randint(0, 7))
+                 for _ in range(rng.randint(1, 12))]
+        kernel = parse_aarch64(
+            "# OSACA-BEGIN\n" + "\n".join(lines) + "\n# OSACA-END")
+        costs = model.resolve_kernel(kernel)
+        schedule = balance_from_costs(costs, model.ports)
+        assert schedule.bound == pytest.approx(
+            brute_force_min_max(gather_classes(costs)), abs=1e-9)
+
+
+# -- explicit per-port DBs: balanced degenerates to optimistic ----------------
+
+
+def test_explicit_per_port_db_gives_balanced_equals_optimistic():
+    """A model whose entries pin µ-ops to explicit ports (pressure floats,
+    no uops) has no assignment freedom: balanced == optimistic."""
+    model = MachineModel(
+        name="pinned", isa="aarch64", ports=("P0", "P1"),
+        db={
+            "fadd:fff": DBEntry(latency=2.0, pressure={"P0": 1.0}),
+            "fmul:fff": DBEntry(latency=3.0, pressure={"P0": 0.5, "P1": 0.5}),
+        },
+        load_entry=DBEntry(latency=4.0, pressure={"P1": 1.0}),
+        store_entry=DBEntry(latency=4.0, pressure={"P1": 1.0}),
+    )
+    kernel = parse_aarch64(
+        "# OSACA-BEGIN\nfadd d0, d1, d2\nfmul d3, d0, d4\n"
+        "fadd d5, d3, d6\n# OSACA-END")
+    analysis = analyze_kernel(kernel, model)
+    assert analysis.tp.balanced_throughput == \
+        pytest.approx(analysis.tp.block_throughput)
+    assert analysis.tp.balanced_port_load == \
+        pytest.approx(analysis.tp.port_pressure)
+
+
+def test_uops_entry_pressure_matches_uniform_split():
+    entry = uops_entry(4.0, [(1.0, ("P0", "P1")), (1.0, ("P4",))])
+    assert entry.pressure == {"P0": 0.5, "P1": 0.5, "P4": 1.0}
+    assert entry.uops == ((1.0, ("P0", "P1")), (1.0, ("P4",)))
+    with pytest.raises(ValueError, match="empty eligible port set"):
+        uops_entry(1.0, [(1.0, ())])
+
+
+def test_combined_with_merges_uops_and_pressure():
+    a = uops_entry(4.0, [(1.0, ("P0", "P1"))])
+    b = DBEntry(latency=6.0, pressure={"P2": 0.5, "P3": 0.5})
+    merged = a.combined_with(b)
+    assert merged.pressure == {"P0": 0.5, "P1": 0.5, "P2": 0.5, "P3": 0.5}
+    # The pressure-only side joins as pinned single-port µ-ops.
+    assert merged.uops == ((1.0, ("P0", "P1")), (0.5, ("P2",)), (0.5, ("P3",)))
+    # Two pressure-only entries combine without inventing µ-ops.
+    assert b.combined_with(b).uops is None
+
+
+# -- report schema v2 ---------------------------------------------------------
+
+
+def test_report_carries_balanced_bound_and_v1_compat():
+    from repro.api import analyze
+
+    report = analyze(GS_TX2_ASM, arch="tx2", unroll=4, name="gs")
+    data = report.to_dict()
+    assert data["schema_version"] == 2
+    assert data["tp_balanced_block"] == pytest.approx(8.5)
+    assert data["balanced_bottleneck"] in ("P0", "P1")
+    restored = AnalysisReport.from_dict(data)
+    assert restored.to_dict() == data
+
+    # A v1 payload (no scheduler fields) loads with balanced == optimistic.
+    v1 = {k: v for k, v in data.items()
+          if k not in ("tp_balanced_block", "balanced_port_load",
+                       "balanced_bottleneck")}
+    v1["schema_version"] = 1
+    legacy = AnalysisReport.from_dict(v1)
+    assert legacy.tp_balanced_block == legacy.tp_block
+    assert legacy.balanced_port_load == legacy.port_pressure
+    assert legacy.balanced_bottleneck == legacy.bottleneck_port
+
+
+def test_renderers_show_both_bounds():
+    from repro.api import analyze
+
+    report = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    text = report.render("text")
+    assert "TP  (balanced)" in text and "balanced port load" in text
+    assert "uniform split" in text
+    md = report.render("markdown")
+    assert "**TP** (balanced)" in md and "`P2`=4.00" in md

@@ -7,6 +7,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   analyzer_scaling     — analysis cost growth on 32/128/512-instr kernels
   scheduler_balance    — min-max port-assignment cost on the 512-instr kernel
   analysis_service     — serving-path req/s + cache hit rate on a hot trace
+  resilience           — resilient path req/s + p99 with 1% faults vs none;
+                         appends to the BENCH_serving.json trajectory
   ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
   hlo_roofline         — HLO parse + three-term roofline on a compiled step
   train_step_tiny      — end-to-end tiny train step wall time
@@ -188,6 +190,90 @@ def analysis_service() -> None:
          f"requests={len(trace)};hits={hits};misses={misses}")
 
 
+def _service_pool():
+    from repro.core.registry import get_arch
+    from repro.serving.analysis import AnalysisRequest
+
+    tx2, csx, zen = get_arch("tx2"), get_arch("csx"), get_arch("zen")
+    return [
+        AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=4, name="gs-tx2"),
+        AnalysisRequest(asm=csx.sample_asm, arch="csx", unroll=4, name="gs-csx"),
+        AnalysisRequest(asm=zen.sample_asm, arch="zen", unroll=4, name="gs-zen"),
+        AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=1, name="gs-tx2-1x"),
+    ]
+
+
+def resilience() -> None:
+    """Resilient serving path under deterministic chaos.
+
+    Two identical single-request traces (per-request submits, so the latency
+    distribution is per request, not per wave) through the *resilient*
+    service — once clean, once with a 1% seeded fault rate at the expensive
+    stage boundaries.  Caching is disabled so every request exercises the
+    full analysis path; faults recover via retry/backoff or the degradation
+    ladder, never as failed requests.  Results are appended to the
+    ``BENCH_serving.json`` trajectory file so serving-path perf regressions
+    are visible per PR.
+    """
+    import json
+    import random
+    from pathlib import Path
+
+    from repro.serving.analysis import AnalysisService
+    from repro.serving.faults import FaultInjector
+    from repro.serving.resilience import ResilienceConfig
+
+    rng = random.Random(0)
+    pool = _service_pool()
+    trace = [pool[rng.randrange(len(pool))] for _ in range(256)]
+
+    def run(service):
+        lats = []
+        t0 = time.perf_counter()
+        for req in trace:
+            s = time.perf_counter()
+            resp = service.submit(req)
+            assert resp.ok  # faults degrade or retry; they never fail
+            lats.append((time.perf_counter() - s) * 1e6)
+        dt = time.perf_counter() - t0
+        lats.sort()
+        pct = lambda q: lats[min(int(len(lats) * q), len(lats) - 1)]  # noqa: E731
+        return {"req_per_s": round(len(trace) / dt, 1),
+                "p50_us": round(pct(0.50), 1), "p99_us": round(pct(0.99), 1)}
+
+    cfg = lambda: ResilienceConfig(request_timeout_s=0.25)  # noqa: E731
+    baseline = AnalysisService(max_cached=0, resilience=cfg())
+    clean = run(baseline)
+    faulty = AnalysisService(
+        max_cached=0, resilience=cfg(),
+        faults=FaultInjector(seed=0, rates={"stage:cp": 0.01,
+                                            "stage:dag": 0.01}))
+    chaotic = run(faulty)
+    chaotic.update({k: faulty.counters[k]
+                    for k in ("retries", "degraded", "timeouts")})
+
+    _row("resilience_clean", 1e6 / max(clean["req_per_s"], 1e-9),
+         f"req_per_s={clean['req_per_s']};p50_us={clean['p50_us']};"
+         f"p99_us={clean['p99_us']}")
+    _row("resilience_faulty_1pct", 1e6 / max(chaotic["req_per_s"], 1e-9),
+         f"req_per_s={chaotic['req_per_s']};p50_us={chaotic['p50_us']};"
+         f"p99_us={chaotic['p99_us']};retries={chaotic['retries']};"
+         f"degraded={chaotic['degraded']}")
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    doc = {"benchmark": "serving", "entries": []}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            pass
+    doc["entries"].append({
+        "bench": "resilience", "requests": len(trace),
+        "fault_rate": 0.01, "clean": clean, "faulty_1pct": chaotic,
+    })
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def ibench_pipeline() -> None:
     import jax.numpy as jnp
     from repro.core.bench import populate_entry
@@ -277,7 +363,7 @@ def main(argv=None) -> None:
     names = sys.argv[1:] if argv is None else list(argv)
     table = {fn.__name__: fn for fn in (
         table1_gauss_seidel, table2_tx2_detail, analyzer_throughput,
-        analyzer_scaling, scheduler_balance, analysis_service,
+        analyzer_scaling, scheduler_balance, analysis_service, resilience,
         ibench_pipeline, hlo_roofline, train_step_tiny, decode_step_tiny)}
     unknown = [n for n in names if n not in table]
     if unknown:

@@ -117,9 +117,19 @@ def _coerce_kernel(source, spec: ArchSpec, name: Optional[str]) -> Kernel:
 
 
 def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
-                name: Optional[str] = None) -> Analysis:
+                name: Optional[str] = None, timeout_s: Optional[float] = None,
+                degrade: bool = False) -> Analysis:
     """Like :func:`analyze` but returning the live assembly-pipeline
-    :class:`Analysis` (kernel/model objects attached).  Asm targets only."""
+    :class:`Analysis` (kernel/model objects attached).  Asm targets only.
+
+    ``timeout_s`` puts the analysis under a deadline checked at every stage
+    boundary; with ``degrade=True`` an expired deadline (or a failed stage)
+    falls down the degradation ladder — full → optimistic-TP-only →
+    parse-only — instead of raising, and the returned analysis carries
+    ``degradation`` / ``stages_completed`` saying which rung answered.
+    Without ``degrade``, a timeout raises
+    :class:`repro.serving.resilience.StageTimeout`.
+    """
     spec = get_arch(arch)
     if spec.is_hlo:
         raise ValueError(
@@ -128,17 +138,31 @@ def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
     if unroll < 1:
         raise ValueError(f"unroll must be >= 1, got {unroll}")
     kernel = _coerce_kernel(source, spec, name)
-    return analyze_kernels([kernel], model_for(spec), unroll=unroll)[0]
+    if timeout_s is None and not degrade:
+        return analyze_kernels([kernel], model_for(spec), unroll=unroll)[0]
+    from repro.core.analysis import analyze_kernel_ladder
+    from repro.serving.resilience import Deadline
+    checkpoint = (Deadline.after(timeout_s).check
+                  if timeout_s is not None else None)
+    return analyze_kernel_ladder(
+        kernel, model_for(spec), unroll, checkpoint=checkpoint,
+        min_rung="parse_only" if degrade else "full")
 
 
 def analyze(source, arch: str = "tx2", unroll: int = 1,
-            name: Optional[str] = None) -> AnalysisReport:
+            name: Optional[str] = None, timeout_s: Optional[float] = None,
+            degrade: bool = False) -> AnalysisReport:
     """Analyze a kernel and return the serializable :class:`AnalysisReport`.
 
     ``source`` may be assembly text, a ``.s``/``.asm`` file path, a parsed
     ``Kernel``, or an HLO module (text starting with ``HloModule``, a parsed
     ``HLOModule``, or a ``Compiled``).  HLO sources are auto-routed to the
     HLO pipeline even when ``arch`` names an asm target's default.
+
+    ``timeout_s`` / ``degrade`` (asm targets only) bound the analysis by a
+    deadline and, when degrading, answer with a cheaper ladder rung instead
+    of failing — the report's ``degraded`` / ``stages_completed`` fields say
+    which rung produced it.
     """
     spec = get_arch(arch)
     # Read path sources up front so the HLO sniff sees file *contents*, not
@@ -158,7 +182,8 @@ def analyze(source, arch: str = "tx2", unroll: int = 1,
         hlo_arch = spec.id if spec.is_hlo else "tpu-v5e"
         return AnalysisReport.from_hlo(source, chip=chip, arch=hlo_arch,
                                        name=name)
-    return analyze_raw(source, arch=arch, unroll=unroll, name=name).to_report()
+    return analyze_raw(source, arch=arch, unroll=unroll, name=name,
+                       timeout_s=timeout_s, degrade=degrade).to_report()
 
 
 def __getattr__(attr):

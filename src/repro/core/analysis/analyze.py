@@ -15,7 +15,7 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Dict, Iterable, List
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.analysis.critical_path import (CriticalPathResult,
                                                critical_path_from_dag)
@@ -28,32 +28,57 @@ from repro.core.isa.instruction import Kernel
 from repro.core.machine.model import MachineModel
 
 
+#: Pipeline stages in execution order; the degradation ladder cuts suffixes.
+ANALYSIS_STAGES: Tuple[str, ...] = ("resolve", "tp", "dag", "cp", "lcd")
+
+#: Degradation rungs, most complete first.  ``full`` is TP(both bounds) +
+#: CP + LCD; ``tp_only`` is the optimistic full-throughput model alone
+#: (no DAG, no scheduler); ``parse_only`` answers with parse-level facts only.
+DEGRADATION_LADDER: Tuple[str, ...] = ("full", "tp_only", "parse_only")
+
+_RUNG_STAGES: Dict[str, Tuple[str, ...]] = {
+    "full": ANALYSIS_STAGES,
+    "tp_only": ("resolve", "tp"),
+    "parse_only": (),
+}
+
+
 @dataclass
 class Analysis:
     kernel: Kernel
     model: MachineModel
     unroll: int
-    tp: ThroughputResult
-    cp: CriticalPathResult
-    lcd: LCDResult
+    # None below "full" on the degradation ladder: a tp_only analysis has no
+    # cp/lcd, a parse_only analysis has none of the three.
+    tp: Optional[ThroughputResult]
+    cp: Optional[CriticalPathResult]
+    lcd: Optional[LCDResult]
+    degradation: str = "full"  # ladder rung that produced this analysis
+    stages_completed: Tuple[str, ...] = ANALYSIS_STAGES
+
+    @property
+    def degraded(self) -> bool:
+        return self.degradation != "full"
 
     # Per high-level (source) iteration numbers — the paper's Table I units.
+    # Degraded analyses report 0.0 for the numbers their rung did not
+    # compute; check ``degraded`` / ``stages_completed`` to tell them apart.
     @property
     def tp_per_it(self) -> float:
-        return self.tp.per_iteration(self.unroll)
+        return self.tp.per_iteration(self.unroll) if self.tp else 0.0
 
     @property
     def tp_balanced_per_it(self) -> float:
         """Min-max optimal-assignment throughput bound (cy per iteration)."""
-        return self.tp.balanced_per_iteration(self.unroll)
+        return self.tp.balanced_per_iteration(self.unroll) if self.tp else 0.0
 
     @property
     def cp_per_it(self) -> float:
-        return self.cp.per_iteration(self.unroll)
+        return self.cp.per_iteration(self.unroll) if self.cp else 0.0
 
     @property
     def lcd_per_it(self) -> float:
-        return self.lcd.per_iteration(self.unroll)
+        return self.lcd.per_iteration(self.unroll) if self.lcd else 0.0
 
     def prediction_bracket(self) -> Dict[str, float]:
         """[TP, CP] runtime bracket with the LCD as the expected value."""
@@ -77,18 +102,112 @@ class Analysis:
         return self.to_report().render("text")
 
 
-def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1) -> Analysis:
-    """Full TP/CP/LCD analysis: one cost resolution, one DAG build."""
+def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1,
+                   checkpoint: Optional[Callable[[str], None]] = None) -> Analysis:
+    """Full TP/CP/LCD analysis: one cost resolution, one DAG build.
+
+    ``checkpoint(stage)`` — when given — is called at every stage boundary
+    (before the stage runs) and may raise to cancel the analysis: the serving
+    path passes a deadline/fault-injection check so an expired request stops
+    at the next boundary instead of finishing a report nobody is waiting for.
+    """
+    check = checkpoint or _no_checkpoint
+    check("resolve")
     costs = model.resolve_kernel(kernel)
+    check("tp")
+    tp = throughput_from_costs(costs, model)
+    check("dag")
     dag = build_dag(kernel, model, copies=2, dual_writeback=True, costs=costs)
-    return Analysis(
-        kernel=kernel,
-        model=model,
-        unroll=unroll,
-        tp=throughput_from_costs(costs, model),
-        cp=critical_path_from_dag(dag),
-        lcd=lcd_from_dag(dag, len(kernel)),
-    )
+    check("cp")
+    cp = critical_path_from_dag(dag)
+    check("lcd")
+    lcd = lcd_from_dag(dag, len(kernel))
+    return Analysis(kernel=kernel, model=model, unroll=unroll,
+                    tp=tp, cp=cp, lcd=lcd)
+
+
+def _no_checkpoint(stage: str) -> None:
+    return None
+
+
+# -- degradation ladder ------------------------------------------------------
+
+
+def analyze_kernel_tp_only(kernel: Kernel, model: MachineModel,
+                           unroll: int = 1,
+                           checkpoint: Optional[Callable[[str], None]] = None,
+                           ) -> Analysis:
+    """Rung 2: optimistic throughput only (the full-throughput model).
+
+    No DAG, no CP/LCD sweeps, and no min-max scheduler — just cost
+    resolution and the uniform-split port accumulation, the cheapest answer
+    that still says something about port pressure.
+    """
+    check = checkpoint or _no_checkpoint
+    check("resolve")
+    costs = model.resolve_kernel(kernel)
+    check("tp")
+    tp = throughput_from_costs(costs, model, balanced=False)
+    return Analysis(kernel=kernel, model=model, unroll=unroll,
+                    tp=tp, cp=None, lcd=None,
+                    degradation="tp_only",
+                    stages_completed=_RUNG_STAGES["tp_only"])
+
+
+def analyze_kernel_parse_only(kernel: Kernel, model: MachineModel,
+                              unroll: int = 1) -> Analysis:
+    """Rung 3: parse-level summary only — always answers.
+
+    The kernel is already parsed when this runs (parsing failures are their
+    own error class), so this rung never touches the machine DB and cannot
+    time out: the floor of the degradation ladder.
+    """
+    return Analysis(kernel=kernel, model=model, unroll=unroll,
+                    tp=None, cp=None, lcd=None,
+                    degradation="parse_only",
+                    stages_completed=_RUNG_STAGES["parse_only"])
+
+
+def analyze_kernel_rung(kernel: Kernel, model: MachineModel, unroll: int = 1,
+                        rung: str = "full",
+                        checkpoint: Optional[Callable[[str], None]] = None,
+                        ) -> Analysis:
+    """Run exactly one ladder rung (``full`` / ``tp_only`` / ``parse_only``)."""
+    if rung == "full":
+        return analyze_kernel(kernel, model, unroll, checkpoint=checkpoint)
+    if rung == "tp_only":
+        return analyze_kernel_tp_only(kernel, model, unroll,
+                                      checkpoint=checkpoint)
+    if rung == "parse_only":
+        return analyze_kernel_parse_only(kernel, model, unroll)
+    raise ValueError(
+        f"unknown degradation rung '{rung}'; known: {DEGRADATION_LADDER}")
+
+
+def analyze_kernel_ladder(kernel: Kernel, model: MachineModel, unroll: int = 1,
+                          checkpoint: Optional[Callable[[str], None]] = None,
+                          min_rung: str = "parse_only") -> Analysis:
+    """Walk the degradation ladder: try each rung down to ``min_rung``.
+
+    A rung that raises (deadline expiry at a stage boundary, injected fault,
+    analysis error) falls through to the next cheaper rung; ``parse_only``
+    runs without checkpoints and therefore always answers.  Raises the last
+    rung's error only when ``min_rung`` cuts the ladder short.
+    """
+    if min_rung not in DEGRADATION_LADDER:
+        raise ValueError(
+            f"unknown degradation rung '{min_rung}'; known: "
+            f"{DEGRADATION_LADDER}")
+    floor = DEGRADATION_LADDER.index(min_rung)
+    last_error: Optional[BaseException] = None
+    for rung in DEGRADATION_LADDER[:floor + 1]:
+        try:
+            return analyze_kernel_rung(kernel, model, unroll, rung=rung,
+                                       checkpoint=checkpoint)
+        except Exception as exc:  # noqa: BLE001 — fall one rung
+            last_error = exc
+    assert last_error is not None
+    raise last_error
 
 
 # -- batch API + process-level analysis cache --------------------------------
@@ -124,6 +243,11 @@ class LRUCache:
         """Account for requests satisfied by in-flight dedup (no lookup)."""
         with self._lock:
             self.stats["hits"] += n
+
+    def evict(self, key) -> bool:
+        """Drop one entry (fault injection simulates cache loss this way)."""
+        with self._lock:
+            return self._data.pop(key, None) is not None
 
     def clear(self) -> None:
         with self._lock:

@@ -80,6 +80,12 @@ def _text_asm(report) -> str:
     lines.append(f"LCD (expected)  : {report.lcd_per_it:6.2f} cy/it   "
                  f"{len(report.lcd_chains)} cyclic chain(s) found")
     lines.append(f"CP  (upper bound): {report.cp_per_it:6.2f} cy/it")
+    if report.degraded:
+        stages = ",".join(report.stages_completed) or "(parse only)"
+        lines.append("")
+        lines.append(f"DEGRADED answer: rung={report.degradation}  "
+                     f"stages completed: {stages} — numbers above cover "
+                     f"only those stages (the rest read 0)")
     return "\n".join(lines)
 
 
@@ -157,6 +163,10 @@ def render_markdown(report) -> str:
                  f"{len(report.lcd_chains)} cyclic chain(s)")
     lines.append(f"- **CP** (upper bound): "
                  f"{bracket['upper_bound_cp'] * scale:.2f} {unit}/it")
+    if report.degraded:
+        stages = ", ".join(report.stages_completed) or "parse only"
+        lines.append(f"- **DEGRADED** — rung `{report.degradation}`; "
+                     f"stages completed: {stages}")
     return "\n".join(lines)
 
 

@@ -24,7 +24,15 @@ from typing import Dict, Optional, Tuple
 #: ``tp_balanced_block``, ``balanced_port_load``, ``balanced_bottleneck``.
 #: v1 payloads load with ``balanced == optimistic`` (v1 predates the
 #: scheduler, when the uniform split was the only model).
+#:
+#: v2 additive (same version, defaulted on load): ``degraded``,
+#: ``degradation``, ``stages_completed`` — the serving path's degradation
+#: ladder marks partial answers (``tp_only`` / ``parse_only`` rungs) so a
+#: caller can always tell a degraded report from a full one.
 SCHEMA_VERSION = 2
+
+#: All pipeline stages, the ``stages_completed`` value of a full report.
+FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd")
 
 #: Bracket keys shared by both kinds — the paper's [TP, CP] runtime bracket
 #: with the LCD as the expected value.
@@ -77,6 +85,11 @@ class AnalysisReport:
     tp_balanced_block: float = 0.0
     balanced_port_load: Dict[str, float] = field(default_factory=dict)
     balanced_bottleneck: str = ""
+    # Degradation ladder (schema v2, additive): a degraded report carries
+    # only the numbers its rung computed; the rest are 0.0.
+    degraded: bool = False
+    degradation: str = "full"  # "full" | "tp_only" | "parse_only"
+    stages_completed: Tuple[str, ...] = FULL_STAGES
     schema_version: int = SCHEMA_VERSION
 
     # -- derived -----------------------------------------------------------
@@ -127,6 +140,9 @@ class AnalysisReport:
             "tp_balanced_block": self.tp_balanced_block,
             "balanced_port_load": dict(self.balanced_port_load),
             "balanced_bottleneck": self.balanced_bottleneck,
+            "degraded": self.degraded,
+            "degradation": self.degradation,
+            "stages_completed": list(self.stages_completed),
             "prediction_bracket": self.prediction_bracket(),
             "rows": [asdict(r) for r in self.rows],
             "lcd_chains": [
@@ -171,6 +187,11 @@ class AnalysisReport:
                                              data["port_pressure"])),
             balanced_bottleneck=data.get("balanced_bottleneck",
                                          data["bottleneck_port"]),
+            # Additive degradation fields: payloads written before the
+            # ladder are, by construction, full reports.
+            degraded=data.get("degraded", False),
+            degradation=data.get("degradation", "full"),
+            stages_completed=tuple(data.get("stages_completed", FULL_STAGES)),
             schema_version=version,
         )
 
@@ -189,23 +210,45 @@ class AnalysisReport:
 
     @classmethod
     def from_analysis(cls, analysis) -> "AnalysisReport":
-        """Snapshot an assembly-pipeline :class:`Analysis`."""
+        """Snapshot an assembly-pipeline :class:`Analysis`.
+
+        Degraded analyses (``tp_only`` / ``parse_only`` ladder rungs) carry
+        only what their rung computed: a ``tp_only`` report has rows and
+        optimistic port pressure but zero CP/LCD, a ``parse_only`` report
+        has rows straight from the parsed forms with no pressure at all.
+        """
+        tp, cp, lcd = analysis.tp, analysis.cp, analysis.lcd
+        cp_on = cp.on_path if cp is not None else frozenset()
+        lcd_on = lcd.on_longest if lcd is not None else frozenset()
         rows = []
-        for idx, (cost, pressure) in enumerate(analysis.tp.per_instruction):
-            rows.append(InstructionRow(
-                index=idx,
-                line_number=cost.form.line_number,
-                asm=cost.form.raw.strip(),
-                mnemonic=cost.form.mnemonic,
-                latency=cost.entry.latency,
-                port_pressure={p: cy for p, cy in pressure.items()},
-                on_critical_path=idx in analysis.cp.on_path,
-                on_lcd=idx in analysis.lcd.on_longest,
-            ))
+        if tp is not None:
+            for idx, (cost, pressure) in enumerate(tp.per_instruction):
+                rows.append(InstructionRow(
+                    index=idx,
+                    line_number=cost.form.line_number,
+                    asm=cost.form.raw.strip(),
+                    mnemonic=cost.form.mnemonic,
+                    latency=cost.entry.latency,
+                    port_pressure={p: cy for p, cy in pressure.items()},
+                    on_critical_path=idx in cp_on,
+                    on_lcd=idx in lcd_on,
+                ))
+        else:  # parse_only: rows from the parsed forms, no DB resolution
+            for idx, form in enumerate(analysis.kernel):
+                rows.append(InstructionRow(
+                    index=idx,
+                    line_number=form.line_number,
+                    asm=form.raw.strip(),
+                    mnemonic=form.mnemonic,
+                    latency=0.0,
+                    port_pressure={},
+                    on_critical_path=False,
+                    on_lcd=False,
+                ))
         chains = tuple(
             LCDChainRow(length=c.length, members=tuple(c.instr_indices),
                         carried_by=c.carried_by)
-            for c in analysis.lcd.chains)
+            for c in lcd.chains) if lcd is not None else ()
         model = analysis.model
         return cls(
             kind="asm",
@@ -217,17 +260,22 @@ class AnalysisReport:
             unit="cy/it",
             ports=tuple(model.ports),
             rows=tuple(rows),
-            port_pressure={p: analysis.tp.port_pressure.get(p, 0.0)
-                           for p in model.ports},
-            bottleneck_port=analysis.tp.bottleneck_port,
-            tp_block=analysis.tp.block_throughput,
-            cp_block=analysis.cp.length,
-            lcd_block=analysis.lcd.longest,
+            port_pressure={p: tp.port_pressure.get(p, 0.0)
+                           for p in model.ports} if tp is not None
+            else {p: 0.0 for p in model.ports},
+            bottleneck_port=tp.bottleneck_port if tp is not None else "",
+            tp_block=tp.block_throughput if tp is not None else 0.0,
+            cp_block=cp.length if cp is not None else 0.0,
+            lcd_block=lcd.longest if lcd is not None else 0.0,
             lcd_chains=chains,
-            tp_balanced_block=analysis.tp.balanced_throughput,
-            balanced_port_load={p: analysis.tp.balanced_port_load.get(p, 0.0)
-                                for p in model.ports},
-            balanced_bottleneck=analysis.tp.balanced_bottleneck,
+            tp_balanced_block=tp.balanced_throughput if tp is not None else 0.0,
+            balanced_port_load={p: tp.balanced_port_load.get(p, 0.0)
+                                for p in model.ports} if tp is not None
+            else {p: 0.0 for p in model.ports},
+            balanced_bottleneck=tp.balanced_bottleneck if tp is not None else "",
+            degraded=analysis.degraded,
+            degradation=analysis.degradation,
+            stages_completed=tuple(analysis.stages_completed),
         )
 
     @classmethod

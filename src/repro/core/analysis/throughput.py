@@ -51,8 +51,15 @@ def throughput_analysis(kernel: Kernel, model: MachineModel,
     return throughput_from_costs(costs, model)
 
 
-def throughput_from_costs(costs, model: MachineModel) -> ThroughputResult:
-    """Accumulate port pressure from already-resolved instruction costs."""
+def throughput_from_costs(costs, model: MachineModel,
+                          balanced: bool = True) -> ThroughputResult:
+    """Accumulate port pressure from already-resolved instruction costs.
+
+    ``balanced=False`` skips the min-max scheduler and mirrors the optimistic
+    numbers into the balanced fields — the pure full-throughput model, used
+    by the serving path's ``tp_only`` degradation rung where the point is to
+    still answer after the expensive stages were cut.
+    """
     totals: Dict[str, float] = {p: 0.0 for p in model.ports}
     per_instruction = []
     for cost in costs:
@@ -61,13 +68,21 @@ def throughput_from_costs(costs, model: MachineModel) -> ThroughputResult:
             totals[port] = totals.get(port, 0.0) + cy
         per_instruction.append((cost, pressure))
     bottleneck = max(totals, key=lambda p: totals[p]) if totals else ""
-    schedule = balance_from_costs(costs, model.ports)
+    if balanced:
+        schedule = balance_from_costs(costs, model.ports)
+        bal_bound = schedule.bound
+        bal_load = schedule.port_load
+        bal_port = schedule.bottleneck_port
+    else:
+        bal_bound = totals.get(bottleneck, 0.0)
+        bal_load = dict(totals)
+        bal_port = bottleneck
     return ThroughputResult(
         port_pressure=totals,
         per_instruction=tuple(per_instruction),
         block_throughput=totals.get(bottleneck, 0.0),
         bottleneck_port=bottleneck,
-        balanced_throughput=schedule.bound,
-        balanced_port_load=schedule.port_load,
-        balanced_bottleneck=schedule.bottleneck_port,
+        balanced_throughput=bal_bound,
+        balanced_port_load=bal_load,
+        balanced_bottleneck=bal_port,
     )

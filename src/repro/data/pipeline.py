@@ -44,8 +44,21 @@ def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int, step: int,
     return out
 
 
+class _ProducerFailed:
+    """Queue sentinel carrying a producer-thread exception to the consumer."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class DataPipeline:
-    """Prefetching iterator of device-placed, sharded batches."""
+    """Prefetching iterator of device-placed, sharded batches.
+
+    Producer failures propagate: an exception on the prefetch thread is
+    delivered to the consumer as a :class:`RuntimeError` (with the original
+    as ``__cause__``) at the next ``__next__`` instead of being swallowed
+    and leaving the training loop blocked on an empty queue forever.
+    """
 
     def __init__(self, cfg: ModelConfig, batch: int, seq: int, *,
                  seed: int = 0, start_step: int = 0,
@@ -60,6 +73,7 @@ class DataPipeline:
         self.depth = depth
         self._queue: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._failure: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._producer, daemon=True)
         self._thread.start()
 
@@ -74,19 +88,57 @@ class DataPipeline:
         step = self.step
         while not self._stop.is_set():
             try:
-                self._queue.put(self._produce_one(step), timeout=0.5)
+                item = self._produce_one(step)
+            except BaseException as exc:  # noqa: BLE001 — relayed to consumer
+                self._failure = exc
+                self._offer(_ProducerFailed(exc))
+                return
+            # Produce once, then retry the *same* item until it fits (or we
+            # are stopped): regenerating on queue.Full re-ran make_batch and
+            # device_put for every retry of the same step.
+            if self._offer(item):
                 step += 1
+
+    def _offer(self, item) -> bool:
+        """Put with stop-polling: returns False only when shutting down."""
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.1)
+                return True
             except queue.Full:
                 continue
+        return False
 
     def __iter__(self) -> Iterator[Dict]:
         return self
 
     def __next__(self) -> Dict:
-        item = self._queue.get()
+        while True:
+            try:
+                # Bounded waits so a dead producer surfaces instead of
+                # blocking the training loop on an empty queue forever.
+                item = self._queue.get(timeout=0.5)
+                break
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    exc = self._failure
+                    raise RuntimeError(
+                        "data pipeline producer thread died"
+                        + (f": {type(exc).__name__}: {exc}" if exc else "")
+                    ) from exc
+        if isinstance(item, _ProducerFailed):
+            raise RuntimeError(
+                f"data pipeline producer failed: "
+                f"{type(item.exc).__name__}: {item.exc}") from item.exc
         self.step += 1
         return item
 
-    def close(self):
+    def close(self, timeout: float = 2.0):
+        """Stop the producer; raises if the thread is stuck (leaking it
+        silently would hide a wedged device_put for the process lifetime)."""
         self._stop.set()
-        self._thread.join(timeout=2)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                "data pipeline producer thread failed to stop within "
+                f"{timeout:.1f}s (blocked outside the queue?)")

@@ -18,23 +18,31 @@ from typing import Callable, Dict, List, Optional
 
 @dataclass
 class HeartbeatRegistry:
-    """Host -> last-seen timestamp; dead = silent for > timeout."""
+    """Host -> last-seen timestamp; dead = silent for *strictly more than*
+    ``timeout_s`` (a beat exactly ``timeout_s`` old is still alive).
+
+    Time is injectable: the registry never reads the wall clock directly —
+    it calls ``clock`` (default ``time.monotonic``), so tests drive liveness
+    transitions with a fake clock instead of sleeping.  Per-call ``now=``
+    overrides remain for callers that already carry timestamps.
+    """
 
     timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
     _beats: Dict[str, float] = field(default_factory=dict)
     _lock: threading.Lock = field(default_factory=threading.Lock)
 
     def beat(self, host: str, now: Optional[float] = None) -> None:
         with self._lock:
-            self._beats[host] = now if now is not None else time.monotonic()
+            self._beats[host] = now if now is not None else self.clock()
 
     def dead_hosts(self, now: Optional[float] = None) -> List[str]:
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self.clock()
         with self._lock:
             return [h for h, t in self._beats.items() if now - t > self.timeout_s]
 
-    def alive_count(self) -> int:
-        return len(self._beats) - len(self.dead_hosts())
+    def alive_count(self, now: Optional[float] = None) -> int:
+        return len(self._beats) - len(self.dead_hosts(now))
 
 
 @dataclass

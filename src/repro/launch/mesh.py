@@ -16,8 +16,9 @@ from repro.distributed import MeshContext
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # axis_types/AxisType landed after jax 0.4.37; Auto is the default there
+    # and here, so omitting the kwarg is equivalent on every version.
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh_context(*, multi_pod: bool = False) -> MeshContext:
@@ -45,11 +46,9 @@ def make_elastic_mesh_context(n_devices: Optional[int] = None,
                 break
     data = n // model_parallel
     if n <= len(jax.devices()):
-        mesh = jax.make_mesh(
-            (data, model_parallel), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((data, model_parallel), ("data", "model"))
     else:
+        # jax 0.4.x AbstractMesh signature: one ((name, size), ...) tuple.
         mesh = jax.sharding.AbstractMesh(
-            (data, model_parallel), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            (("data", data), ("model", model_parallel)))
     return MeshContext(mesh=mesh, data_axes=("data",), model_axis="model")

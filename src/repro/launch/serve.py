@@ -59,9 +59,30 @@ def _analysis_pool(args):
     ]
 
 
-def _serve_analysis(args) -> None:
+def _analysis_service(args):
+    """Build the service; resilience turns on when any knob is set."""
     from repro.serving.analysis import AnalysisService
+    from repro.serving.faults import FaultInjector
+    from repro.serving.resilience import ResilienceConfig
 
+    resilience = None
+    if args.deadline_ms > 0 or args.queue_depth > 0 or args.fault_rate > 0:
+        resilience = ResilienceConfig(
+            request_timeout_s=args.deadline_ms / 1e3,
+            max_queue_depth=args.queue_depth,
+            min_rung=args.min_rung)
+    faults = None
+    if args.fault_rate > 0:
+        # Spread the configured rate over the expensive stage boundaries.
+        faults = FaultInjector(seed=args.fault_seed, rates={
+            "stage:dag": args.fault_rate,
+            "stage:cp": args.fault_rate,
+            "stage:lcd": args.fault_rate,
+        })
+    return AnalysisService(resilience=resilience, faults=faults)
+
+
+def _serve_analysis(args) -> None:
     try:
         pool = _analysis_pool(args)
     except (ValueError, OSError) as exc:  # unknown arch / bad --kernel-file
@@ -69,7 +90,7 @@ def _serve_analysis(args) -> None:
     rng = np.random.default_rng(0)
     requests = [pool[i] for i in rng.integers(0, len(pool), size=args.requests)]
 
-    service = AnalysisService()
+    service = _analysis_service(args)
     t0 = time.time()
     responses = []
     for start in range(0, len(requests), args.batch_size):
@@ -83,6 +104,9 @@ def _serve_analysis(args) -> None:
         "event": "summary",
         "requests": len(responses),
         "errors": sum(1 for r in responses if not r.ok),
+        "degraded": sum(1 for r in responses if r.degraded),
+        "shed": service.counters["shed"],
+        "retries": service.counters["retries"],
         "seconds": dt,
         "req_per_s": len(responses) / max(dt, 1e-9),
         "cache_hits": service.stats["hits"],
@@ -99,6 +123,19 @@ def main() -> None:
     ap.add_argument("--kernel-file", default=None,
                     help="assembly file to analyze (--mode analyze)")
     ap.add_argument("--unroll", type=int, default=4)
+    # Resilience knobs (--mode analyze): any of these switches the service
+    # onto the resilient path (deadlines, backpressure, degradation ladder).
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request analysis deadline (0 = none)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="admission bound; excess load is shed with "
+                         "OVERLOADED + retry_after (0 = unbounded)")
+    ap.add_argument("--min-rung", default="parse_only",
+                    choices=("full", "tp_only", "parse_only"),
+                    help="cheapest degradation rung allowed")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="deterministic injected fault rate per stage site")
+    ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -1,8 +1,15 @@
 from repro.serving.analysis import (AnalysisRequest, AnalysisResponse,
                                     AnalysisService)
+from repro.serving.faults import FaultInjector, InjectedFault, VirtualClock
+from repro.serving.resilience import (AdmissionController, CircuitBreaker,
+                                      Deadline, ErrorCode, ResilienceConfig,
+                                      RetryPolicy, ServingError, StageTimeout)
 
-__all__ = ["AnalysisRequest", "AnalysisResponse", "AnalysisService",
-           "GenerationResult", "ServeEngine"]
+__all__ = ["AdmissionController", "AnalysisRequest", "AnalysisResponse",
+           "AnalysisService", "CircuitBreaker", "Deadline", "ErrorCode",
+           "FaultInjector", "GenerationResult", "InjectedFault",
+           "ResilienceConfig", "RetryPolicy", "ServeEngine", "ServingError",
+           "StageTimeout", "VirtualClock"]
 
 
 def __getattr__(attr):

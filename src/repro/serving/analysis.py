@@ -5,42 +5,66 @@ assembly text plus an architecture id (any registry alias — the arch →
 parser/model tables live in :mod:`repro.core.registry`, not here), the
 service parses, analyzes, and answers with versioned
 :class:`AnalysisResponse` envelopes carrying serializable
-:class:`~repro.core.analysis.report.AnalysisReport` payloads.  A malformed
-request (unknown arch, bad isa, unparsable asm) yields a per-request error
-response; the rest of the wave is served normally.
+:class:`~repro.core.analysis.report.AnalysisReport` payloads.
 
-Amortization happens at three levels:
+Failures are structured, not free text (wire contract v2): every error
+envelope carries a taxonomy code (``PARSE_ERROR`` / ``UNKNOWN_ARCH`` /
+``STAGE_TIMEOUT`` / ``OVERLOADED`` / ``DEGRADED`` / ``INTERNAL``), a
+transient/permanent classification, and — for shed load — a ``retry_after_s``
+hint.  v1 envelopes (PR 2) still parse; the new fields default.
 
-1. one :class:`MachineModel` instance per architecture lives for the service
-   lifetime, so its instruction-lookup memo stays warm across requests;
-2. batches go through ``analyze_kernels``, which shares the process-level
-   analysis LRU (keyed by kernel text + model name + unroll) — concurrent
-   requests for the same hot loop body pay for one analysis;
-3. parsed-kernel results are additionally cached here by request key, so a
-   repeat request skips even the parse.
+With a :class:`~repro.serving.resilience.ResilienceConfig` attached, the
+request path becomes resilient:
 
-Cache hits are returned as per-request views carrying the requester's kernel
-name (the underlying result objects are shared).  This is the CPU-side
-counterpart of the continuous-batching token engine in
-``repro.serving.engine``: many small independent requests, served out of one
-warm process.
+* **admission control** — ``submit_batch`` admits at most
+  ``max_queue_depth`` requests; the excess is shed immediately with
+  ``OVERLOADED`` + ``retry_after_s`` instead of queueing unboundedly;
+* **per-arch circuit breakers** — consecutive backend failures (timeouts,
+  internal errors, forced degradations) trip an arch OPEN; its requests are
+  rejected until the breaker half-opens on a timer and a probe succeeds;
+* **deadlines** — each analysis job runs under a per-request budget,
+  checked cooperatively at every pipeline stage boundary and (with the real
+  clock) enforced by a cancellable worker thread;
+* **retry with exponential backoff + deterministic jitter** for faults
+  classified as transient;
+* the **degradation ladder** — when retries are exhausted the job falls to
+  a cheaper rung (full → tp_only → parse_only) so one pathological kernel
+  yields a partial answer, not a stalled wave.  Degraded responses are
+  marked (``degraded``, ``stages_completed``, code ``DEGRADED``) and are
+  **never cached as full results**.
+
+Amortization is unchanged from PR 1/2: warm per-arch models, the process
+LRU through ``analyze_kernels``, and a request-key cache here.  Fault
+injection (:class:`repro.serving.faults.FaultInjector`) hooks named points
+(``parse``, ``stage:*``, ``timeout:*``, ``cache``) so the chaos suite can
+prove every ladder rung and breaker transition deterministically.
 """
 
 from __future__ import annotations
 
 import copy
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.analysis import (Analysis, AnalysisReport, analysis_view,
+from repro.core.analysis import (Analysis, AnalysisReport, DEGRADATION_LADDER,
+                                 analysis_view, analyze_kernel_rung,
                                  analyze_kernels)
 from repro.core.analysis.analyze import LRUCache
 from repro.core.isa import parse_aarch64, parse_x86
 from repro.core.machine import MachineModel
 from repro.core.registry import ArchSpec, get_arch
+from repro.serving.faults import FaultInjector
+from repro.serving.resilience import (AdmissionController, CircuitBreaker,
+                                      Deadline, ErrorCode, ResilienceConfig,
+                                      ServingError, StageTimeout,
+                                      classify_exception, is_transient,
+                                      run_with_deadline)
 
-#: Version of the request/response wire contract (bumped on breaking change).
-API_VERSION = 1
+#: Version of the request/response wire contract.  v2 adds structured error
+#: codes, retry/backpressure hints, and degradation metadata — additively,
+#: so v1 payloads still parse and v1 readers can ignore the new fields.
+API_VERSION = 2
 
 _PARSERS = {
     "aarch64": parse_aarch64,
@@ -50,10 +74,12 @@ _PARSERS = {
 
 @dataclass(frozen=True)
 class AnalysisRequest:
-    """One kernel-analysis request (v1 wire contract).
+    """One kernel-analysis request (v2 wire contract, v1-compatible).
 
     ``isa`` is optional: when empty it is resolved from the architecture
-    registry.  ``arch`` accepts any registry id or alias.
+    registry.  ``arch`` accepts any registry id or alias.  ``timeout_s``
+    overrides the service's per-request deadline (0 = use the service
+    default; ignored when the service has no resilience config).
     """
 
     asm: str
@@ -61,6 +87,7 @@ class AnalysisRequest:
     isa: str = ""  # "aarch64" | "x86" | "" (resolve via registry)
     unroll: int = 1
     name: str = "kernel"
+    timeout_s: float = 0.0
     version: int = API_VERSION
 
     @property
@@ -68,7 +95,8 @@ class AnalysisRequest:
         """Canonical cache identity: registry-resolved arch id + isa, so
         aliases (``cascadelake`` vs ``csx``) share one entry.  Falls back to
         the raw fields when the arch is unknown (the request then errors at
-        analysis time anyway)."""
+        analysis time anyway).  ``timeout_s`` is deliberately excluded: it
+        shapes how long we try, not what the answer is."""
         try:
             spec = get_arch(self.arch)
         except ValueError:
@@ -77,25 +105,40 @@ class AnalysisRequest:
 
     def to_dict(self) -> Dict:
         return {"version": self.version, "asm": self.asm, "arch": self.arch,
-                "isa": self.isa, "unroll": self.unroll, "name": self.name}
+                "isa": self.isa, "unroll": self.unroll, "name": self.name,
+                "timeout_s": self.timeout_s}
 
     @classmethod
     def from_dict(cls, data: Dict) -> "AnalysisRequest":
         return cls(asm=data["asm"], arch=data.get("arch", "tx2"),
                    isa=data.get("isa", ""), unroll=data.get("unroll", 1),
                    name=data.get("name", "kernel"),
+                   timeout_s=data.get("timeout_s", 0.0),
                    version=data.get("version", API_VERSION))
 
 
 @dataclass(frozen=True)
 class AnalysisResponse:
-    """Versioned per-request envelope: a report, or an error string."""
+    """Versioned per-request envelope: a report, or a structured error.
+
+    ``ok`` keeps its v1 meaning (*there is a report*); a degraded answer is
+    ``ok=True`` with ``degraded=True`` and ``error_code="DEGRADED"`` so v1
+    readers still consume it while v2 readers can tell it apart.  Hard
+    failures carry ``error_code`` plus ``retryable`` (is it worth retrying
+    the same request?) and, for shed load, ``retry_after_s``.
+    """
 
     ok: bool
     name: str
     arch: str = ""
     report: Optional[AnalysisReport] = None
     error: str = ""
+    error_code: str = ""  # ErrorCode taxonomy; "" on full success
+    retryable: bool = False
+    retry_after_s: float = 0.0
+    degraded: bool = False
+    stages_completed: Tuple[str, ...] = ()
+    attempts: int = 1
     version: int = API_VERSION
 
     def to_dict(self) -> Dict:
@@ -105,6 +148,12 @@ class AnalysisResponse:
             "name": self.name,
             "arch": self.arch,
             "error": self.error,
+            "error_code": self.error_code,
+            "retryable": self.retryable,
+            "retry_after_s": self.retry_after_s,
+            "degraded": self.degraded,
+            "stages_completed": list(self.stages_completed),
+            "attempts": self.attempts,
             "report": self.report.to_dict() if self.report is not None else None,
         }
 
@@ -114,21 +163,60 @@ class AnalysisResponse:
         return cls(
             ok=data["ok"], name=data.get("name", ""),
             arch=data.get("arch", ""), error=data.get("error", ""),
+            # v1 envelopes predate the taxonomy: errors get INTERNAL (the
+            # free-text string is preserved verbatim), successes stay clean.
+            error_code=data.get("error_code",
+                                "" if data["ok"] else ErrorCode.INTERNAL),
+            retryable=data.get("retryable", False),
+            retry_after_s=data.get("retry_after_s", 0.0),
+            degraded=data.get("degraded", False),
+            stages_completed=tuple(data.get("stages_completed", ())),
+            attempts=data.get("attempts", 1),
             report=AnalysisReport.from_dict(report) if report else None,
             version=data.get("version", API_VERSION),
         )
 
 
 @dataclass
+class _Outcome:
+    """Internal per-job result: an analysis (possibly degraded) or an error."""
+
+    analysis: Optional[Analysis] = None
+    error: Optional[BaseException] = None
+    attempts: int = 1
+    retry_after_s: float = 0.0
+
+
+@dataclass
 class AnalysisService:
-    """Long-lived analysis frontend with per-request LRU caching."""
+    """Long-lived analysis frontend with per-request LRU caching.
+
+    ``resilience=None`` (the default) keeps the plain PR-2 request path —
+    no deadlines, no admission bound, no breakers, zero added overhead —
+    while still answering with structured v2 envelopes.  Attach a
+    :class:`ResilienceConfig` (and optionally a :class:`FaultInjector`) to
+    turn on the resilient path.
+    """
 
     max_cached: int = 256
     models: Dict[str, MachineModel] = field(default_factory=dict)
+    resilience: Optional[ResilienceConfig] = None
+    faults: Optional[FaultInjector] = None
     _cache: LRUCache = field(init=False, repr=False)
 
     def __post_init__(self):
         self._cache = LRUCache(self.max_cached)
+        cfg = self.resilience
+        self._admission = AdmissionController(
+            max_depth=cfg.max_queue_depth if cfg else 0,
+            retry_after_s=cfg.retry_after_s if cfg else 0.05)
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._jitter_rng = (cfg or ResilienceConfig()).jitter_rng()
+        #: Resilience event counters (separate from cache hit/miss stats).
+        self.counters: Dict[str, int] = {
+            "shed": 0, "breaker_rejected": 0, "retries": 0,
+            "degraded": 0, "timeouts": 0, "faults_injected": 0,
+        }
 
     @property
     def stats(self) -> Dict[str, int]:
@@ -147,6 +235,17 @@ class AnalysisService:
             self.models[spec.id] = model
         return model
 
+    def breaker_for(self, arch_id: str) -> CircuitBreaker:
+        """The per-arch circuit breaker (created lazily)."""
+        breaker = self._breakers.get(arch_id)
+        if breaker is None:
+            cfg = self.resilience or ResilienceConfig()
+            breaker = CircuitBreaker(
+                failure_threshold=cfg.breaker_failure_threshold,
+                reset_timeout_s=cfg.breaker_reset_s, clock=cfg.clock)
+            self._breakers[arch_id] = breaker
+        return breaker
+
     # -- versioned request/response API ------------------------------------
 
     def submit(self, request: AnalysisRequest) -> AnalysisResponse:
@@ -156,18 +255,60 @@ class AnalysisService:
         self, requests: Sequence[AnalysisRequest]
     ) -> List[AnalysisResponse]:
         """Serve a wave; malformed requests become error responses while the
-        rest of the wave is analyzed normally."""
-        responses = []
-        for req, result in zip(requests, self._analyze_batch(requests)):
-            if isinstance(result, Exception):
-                responses.append(AnalysisResponse(
-                    ok=False, name=req.name, arch=req.arch,
-                    error=f"{type(result).__name__}: {result}"))
-            else:
-                responses.append(AnalysisResponse(
-                    ok=True, name=req.name, arch=result.model.name,
-                    report=result.to_report()))
+        rest of the wave is analyzed normally.  With resilience configured,
+        load beyond the admission bound is shed up front (``OVERLOADED`` +
+        ``retry_after_s``) and each analysis job runs under deadlines,
+        retries, breakers, and the degradation ladder."""
+        if self.resilience is None and self.faults is None:
+            return [self._envelope(req, _Outcome(analysis=res)
+                                   if not isinstance(res, BaseException)
+                                   else _Outcome(error=res))
+                    for req, res in zip(requests, self._analyze_batch(requests))]
+        granted = self._admission.try_acquire(len(requests))
+        admitted = list(requests)[:granted]
+        try:
+            outcomes = self._execute_resilient(admitted)
+        finally:
+            self._admission.release(granted)
+        responses = [self._envelope(req, out)
+                     for req, out in zip(admitted, outcomes)]
+        overload = self._admission.overload_error()
+        for req in list(requests)[granted:]:
+            self.counters["shed"] += 1
+            responses.append(AnalysisResponse(
+                ok=False, name=req.name, arch=req.arch,
+                error=str(overload), error_code=ErrorCode.OVERLOADED,
+                retryable=True, retry_after_s=overload.retry_after_s,
+                attempts=0))
         return responses
+
+    def _envelope(self, req: AnalysisRequest,
+                  outcome: _Outcome) -> AnalysisResponse:
+        if outcome.analysis is not None:
+            analysis = outcome.analysis
+            report = analysis.to_report()
+            degraded = analysis.degraded
+            if degraded:
+                self.counters["degraded"] += 1
+            return AnalysisResponse(
+                ok=True, name=req.name, arch=analysis.model.name,
+                report=report,
+                error_code=ErrorCode.DEGRADED if degraded else "",
+                degraded=degraded,
+                stages_completed=tuple(analysis.stages_completed),
+                attempts=outcome.attempts)
+        exc = outcome.error
+        assert exc is not None
+        code = classify_exception(exc)
+        if code == ErrorCode.STAGE_TIMEOUT:
+            self.counters["timeouts"] += 1
+        return AnalysisResponse(
+            ok=False, name=req.name, arch=req.arch,
+            error=f"{type(exc).__name__}: {exc}", error_code=code,
+            retryable=is_transient(exc),
+            retry_after_s=outcome.retry_after_s
+            or getattr(exc, "retry_after_s", 0.0),
+            attempts=outcome.attempts)
 
     # -- legacy Analysis API (raises on the first bad request) -------------
 
@@ -179,7 +320,9 @@ class AnalysisService:
 
         Identical requests within the wave (and across waves, via the LRU)
         are parsed and analyzed once; per (arch, unroll) group the distinct
-        kernels share one warm model through ``analyze_kernels``.
+        kernels share one warm model through ``analyze_kernels``.  Always
+        the plain path: no deadlines, no degradation (callers who want the
+        resilient behavior use ``submit_batch``).
         """
         results = self._analyze_batch(requests)
         for result in results:
@@ -260,3 +403,172 @@ class AnalysisService:
                 out[pos] = analysis_view(analysis, requests[pos].name)
             self._cache.put(key, analysis)
         return out  # type: ignore[return-value]
+
+    # -- resilient engine --------------------------------------------------
+
+    def _execute_resilient(
+        self, requests: Sequence[AnalysisRequest]
+    ) -> List[_Outcome]:
+        """The dedup/caching wave loop, with breakers, fault-injection
+        points, and per-job deadlines/retries/degradation."""
+        cfg = self.resilience or ResilienceConfig()
+        out: List[Optional[_Outcome]] = [None] * len(requests)
+        jobs: List[Tuple[List[int], object, tuple, str, int, float]] = []
+        pending: Dict[tuple, List[int]] = {}
+        for pos, req in enumerate(requests):
+            try:
+                spec, parser, key = self._resolve(req)
+            except ValueError as exc:
+                out[pos] = _Outcome(error=exc)
+                continue
+            breaker = self.breaker_for(spec.id)
+            if not breaker.allow():
+                self.counters["breaker_rejected"] += 1
+                retry_after = breaker.retry_after()
+                out[pos] = _Outcome(error=ServingError(
+                    ErrorCode.OVERLOADED,
+                    f"circuit breaker open for arch '{spec.id}'",
+                    retryable=True, retry_after_s=retry_after),
+                    retry_after_s=retry_after, attempts=0)
+                continue
+            if self.faults is not None and self.faults.evicts("cache"):
+                self._cache.evict(key)
+            hit = self._cache.get(key)
+            if hit is not None:
+                out[pos] = (_Outcome(error=hit)
+                            if isinstance(hit, Exception)
+                            else _Outcome(analysis=analysis_view(hit, req.name)))
+                continue
+            if key in pending:
+                pending[key].append(pos)
+                self._cache.count_extra_hits()
+                continue
+            try:
+                if self.faults is not None:
+                    self.faults.check("parse")
+                kernel = parser(req.asm, name=req.name)
+            except Exception as exc:
+                exc = exc.with_traceback(None)
+                out[pos] = _Outcome(error=exc)
+                # Negative-cache only permanent parse failures; a transient
+                # injected fault must not poison future requests.
+                if not is_transient(exc):
+                    self._cache.put(key, exc)
+                continue
+            pending[key] = [pos]
+            timeout_s = req.timeout_s or cfg.request_timeout_s
+            jobs.append((pending[key], kernel, key, spec.id, req.unroll,
+                         timeout_s))
+
+        for positions, kernel, key, arch_id, unroll, timeout_s in jobs:
+            model = self.model_for(arch_id)
+            outcome = self._run_job(kernel, model, unroll, timeout_s, cfg)
+            breaker = self.breaker_for(arch_id)
+            analysis = outcome.analysis
+            if analysis is not None and not analysis.degraded:
+                # Only full, undegraded successes enter the cache; a
+                # degraded answer served from cache would silently demote
+                # every future request for that kernel.
+                breaker.record_success()
+                self._cache.put(key, analysis)
+                for pos in positions:
+                    out[pos] = _Outcome(
+                        analysis=analysis_view(analysis, requests[pos].name),
+                        attempts=outcome.attempts)
+                continue
+            # Degraded answers and backend failures both count against the
+            # breaker: either way the backend failed to produce a full
+            # report for this arch.
+            breaker.record_failure()
+            if analysis is not None:
+                for pos in positions:
+                    out[pos] = _Outcome(
+                        analysis=analysis_view(analysis, requests[pos].name),
+                        attempts=outcome.attempts)
+                continue
+            exc = outcome.error
+            assert exc is not None
+            if isinstance(exc, Exception):
+                exc = exc.with_traceback(None)
+            if not is_transient(exc):
+                self._cache.put(key, exc)
+            for pos in positions:
+                out[pos] = _Outcome(error=exc, attempts=outcome.attempts,
+                                    retry_after_s=outcome.retry_after_s)
+        return out  # type: ignore[return-value]
+
+    def _run_job(self, kernel, model, unroll: int, timeout_s: float,
+                 cfg: ResilienceConfig) -> _Outcome:
+        """One kernel through deadline + retry + degradation ladder."""
+        deadline = (Deadline.after(timeout_s, cfg.clock)
+                    if timeout_s > 0 else None)
+        if cfg.degrade and cfg.min_rung != "full":
+            floor = DEGRADATION_LADDER.index(cfg.min_rung)
+            rungs = DEGRADATION_LADDER[:floor + 1]
+        else:
+            rungs = ("full",)
+        attempts = 0
+        last_exc: Optional[BaseException] = None
+        for rung in rungs:
+            checkpoint = (None if rung == "parse_only"
+                          else self._make_checkpoint(deadline, cfg))
+            max_attempts = max(cfg.retry.max_attempts, 1)
+            for attempt in range(max_attempts):
+                attempts += 1
+                try:
+                    analysis = self._run_rung(kernel, model, unroll, rung,
+                                              checkpoint, deadline, cfg)
+                    return _Outcome(analysis=analysis, attempts=attempts)
+                except Exception as exc:  # noqa: BLE001 — classified below
+                    last_exc = exc
+                    if not is_transient(exc):
+                        break  # permanent: retries can't help, drop a rung
+                    expired = deadline is not None and deadline.expired
+                    if attempt + 1 < max_attempts and not expired:
+                        self.counters["retries"] += 1
+                        cfg.sleep(cfg.retry.backoff(attempt, self._jitter_rng))
+                        continue
+                    break  # retries/deadline exhausted: drop a rung
+        assert last_exc is not None
+        return _Outcome(error=last_exc, attempts=attempts)
+
+    def _run_rung(self, kernel, model, unroll: int, rung: str, checkpoint,
+                  deadline: Optional[Deadline], cfg: ResilienceConfig):
+        def run():
+            return analyze_kernel_rung(kernel, model, unroll, rung=rung,
+                                       checkpoint=checkpoint)
+
+        # The cancellable worker bounds wall time even when a stage blocks
+        # between checkpoints; with a virtual clock (chaos tests) wall time
+        # never advances on its own, so the cooperative checks suffice.
+        if (cfg.use_worker and deadline is not None
+                and cfg.clock is time.monotonic and rung != "parse_only"):
+            return run_with_deadline(run, deadline.remaining())
+        return run()
+
+    def _make_checkpoint(self, deadline: Optional[Deadline],
+                         cfg: ResilienceConfig):
+        """The cooperative stage-boundary hook: fault injection first (a
+        ``timeout:<stage>`` site advances the virtual clock so the *real*
+        deadline machinery trips), then the request deadline, then the
+        per-stage budget (detected at the next boundary)."""
+        state = {"stage": "", "since": cfg.clock()}
+
+        def checkpoint(stage: str) -> None:
+            if self.faults is not None:
+                try:
+                    self.faults.check(f"timeout:{stage}")
+                    self.faults.check(f"stage:{stage}")
+                except ServingError:
+                    self.counters["faults_injected"] += 1
+                    raise
+            now = cfg.clock()
+            prev, prev_since = state["stage"], state["since"]
+            state["stage"], state["since"] = stage, now
+            if deadline is not None:
+                deadline.check(stage)
+            if cfg.stage_timeout_s > 0 and prev and \
+                    now - prev_since > cfg.stage_timeout_s:
+                raise StageTimeout(prev, cfg.stage_timeout_s)
+
+        return checkpoint

@@ -74,8 +74,9 @@ DRYRUN_SMOKE = textwrap.dedent("""
     from repro.train import make_train_step
     from repro.train.state import abstract_train_state, state_shardings
 
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # axis_types/AxisType landed after jax 0.4.37; Auto is the default
+    # everywhere, so passing nothing is equivalent on every version.
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
     ctx = MeshContext(mesh=mesh, data_axes=("data",), model_axis="model")
     set_mesh_context(ctx)
 

@@ -163,3 +163,104 @@ def test_elastic_restore_across_meshes(tmp_path):
     np.testing.assert_array_equal(
         np.asarray(restored.params["embed"], np.float32),
         np.asarray(state.params["embed"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat registry with an injected clock (no sleeps, no wall clock).
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_injected_clock_boundary():
+    """A beat exactly ``timeout_s`` old is still alive; strictly older dies."""
+    t = {"now": 100.0}
+    reg = HeartbeatRegistry(timeout_s=10.0, clock=lambda: t["now"])
+    reg.beat("h0")
+    reg.beat("h1")
+    assert reg.dead_hosts() == []
+    t["now"] = 110.0  # exactly timeout_s since the beats
+    assert reg.dead_hosts() == []
+    assert reg.alive_count() == 2
+    t["now"] = 110.0 + 1e-6  # strictly past the boundary
+    assert sorted(reg.dead_hosts()) == ["h0", "h1"]
+    assert reg.alive_count() == 0
+
+
+def test_heartbeat_late_beat_revives_host():
+    """A host flagged dead comes back alive on its next beat (late
+    heartbeat revival), while silent peers stay dead."""
+    t = {"now": 0.0}
+    reg = HeartbeatRegistry(timeout_s=5.0, clock=lambda: t["now"])
+    reg.beat("h0")
+    reg.beat("h1")
+    t["now"] = 20.0
+    assert sorted(reg.dead_hosts()) == ["h0", "h1"]
+    reg.beat("h0")  # late beat at the injected now
+    assert reg.dead_hosts() == ["h1"]
+    assert reg.alive_count() == 1
+    # Explicit now= override still works alongside the injected clock.
+    reg.beat("h1", now=19.0)
+    assert reg.dead_hosts(now=24.0) == []
+    assert reg.dead_hosts(now=24.0 + 1e-6) == ["h1"]
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline: producer failures surface at the consumer; shutdown is
+# bounded.
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return tiny_variant(get_config("tinyllama-1.1b"))
+
+
+def test_pipeline_producer_exception_propagates():
+    """An exception on the prefetch thread reaches the consumer as a
+    RuntimeError with the original as ``__cause__`` — not a silent hang."""
+    from repro.data import DataPipeline
+
+    class FailingPipeline(DataPipeline):
+        def _produce_one(self, step):
+            if step >= 2:
+                raise ValueError(f"corrupt shard at step {step}")
+            return super()._produce_one(step)
+
+    pipe = FailingPipeline(_tiny_cfg(), batch=2, seq=16, seed=0)
+    assert next(pipe)["tokens"].shape == (2, 16)
+    assert next(pipe)["tokens"].shape == (2, 16)
+    with pytest.raises(RuntimeError, match="producer failed.*corrupt shard"):
+        # The failure lands either as the queued sentinel or (if the thread
+        # already exited) the dead-thread probe; both carry the cause.
+        next(pipe)
+    pipe.close()
+
+
+def test_pipeline_immediate_failure_does_not_hang():
+    from repro.data import DataPipeline
+
+    class DeadOnArrival(DataPipeline):
+        def _produce_one(self, step):
+            raise KeyError("missing field")
+
+    pipe = DeadOnArrival(_tiny_cfg(), batch=2, seq=16, seed=0)
+    with pytest.raises(RuntimeError) as ei:
+        next(pipe)
+    assert isinstance(ei.value.__cause__, KeyError)
+    pipe.close()
+
+
+def test_pipeline_close_surfaces_stuck_thread():
+    """close() raises when the producer cannot stop (wedged outside the
+    queue), instead of silently leaking the thread."""
+    from repro.data import DataPipeline
+
+    release = threading.Event()
+
+    class StuckPipeline(DataPipeline):
+        def _producer(self):
+            release.wait()  # ignores _stop: simulates a wedged device_put
+
+    pipe = StuckPipeline(_tiny_cfg(), batch=2, seq=16, seed=0)
+    try:
+        with pytest.raises(RuntimeError, match="failed to stop"):
+            pipe.close(timeout=0.1)
+    finally:
+        release.set()  # let the thread exit so the test process stays clean
+        pipe._thread.join(timeout=2.0)

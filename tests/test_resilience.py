@@ -1,0 +1,577 @@
+"""Chaos suite for the resilient serving path.
+
+Every failure mode the resilience layer claims to handle is *demonstrated*
+here deterministically: virtual clocks instead of sleeps, seeded fault
+injection instead of flaky races.  Covers the primitives
+(:mod:`repro.serving.resilience`), the injection harness
+(:mod:`repro.serving.faults`), and the end-to-end ``AnalysisService``
+behavior: every degradation-ladder rung, circuit-breaker transitions,
+backpressure shedding, retry/backoff determinism, cache hygiene (degraded or
+failed analyses are never cached as full results), and v1 envelope
+compatibility.
+"""
+
+import threading
+
+import pytest
+
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM
+from repro.serving.analysis import (API_VERSION, AnalysisRequest,
+                                    AnalysisResponse, AnalysisService)
+from repro.serving.faults import FaultInjector, InjectedFault, VirtualClock
+from repro.serving.resilience import (AdmissionController, CircuitBreaker,
+                                      Deadline, ErrorCode, ResilienceConfig,
+                                      RetryPolicy, ServingError, StageTimeout,
+                                      classify_exception, is_transient,
+                                      run_with_deadline)
+
+FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd")
+
+
+def resilient_config(clock, **kw):
+    """A ResilienceConfig fully on the virtual clock (no real sleeps)."""
+    kw.setdefault("request_timeout_s", 10.0)
+    return ResilienceConfig(clock=clock, sleep=clock.sleep, **kw)
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+
+
+def test_classify_exception_taxonomy():
+    assert classify_exception(ValueError("unknown arch 'm1'")) == \
+        ErrorCode.UNKNOWN_ARCH
+    assert classify_exception(ValueError("unknown isa 'martian'")) == \
+        ErrorCode.UNKNOWN_ARCH
+    assert classify_exception(ValueError("bad operand")) == ErrorCode.PARSE_ERROR
+    assert classify_exception(KeyError("fmla")) == ErrorCode.PARSE_ERROR
+    assert classify_exception(RuntimeError("boom")) == ErrorCode.INTERNAL
+    assert classify_exception(StageTimeout("cp")) == ErrorCode.STAGE_TIMEOUT
+    err = ServingError(ErrorCode.OVERLOADED, "full", retryable=True)
+    assert classify_exception(err) == ErrorCode.OVERLOADED
+    assert is_transient(err) and is_transient(StageTimeout("cp"))
+    assert not is_transient(ValueError("bad operand"))
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_on_virtual_clock():
+    clock = VirtualClock()
+    d = Deadline.after(1.0, clock)
+    assert d.remaining() == pytest.approx(1.0)
+    d.check("tp")  # not expired: no raise
+    clock.advance(0.5)
+    assert not d.expired
+    clock.advance(0.5)  # exactly at the deadline counts as expired
+    assert d.expired
+    with pytest.raises(StageTimeout) as ei:
+        d.check("dag")
+    assert ei.value.stage == "dag"
+    assert ei.value.code == ErrorCode.STAGE_TIMEOUT
+    assert ei.value.retryable
+
+
+def test_run_with_deadline_bounds_a_blocked_worker():
+    """A function that blocks *between* cooperative checkpoints is still
+    bounded by wall time; the abandoned worker exits once released."""
+    release = threading.Event()
+
+    def blocked():
+        release.wait()
+        return "late"
+
+    try:
+        with pytest.raises(StageTimeout) as ei:
+            run_with_deadline(blocked, 0.05)
+        assert ei.value.stage == "worker"
+    finally:
+        release.set()  # let the daemonized worker exit
+    # Fast paths: results and exceptions relay through.
+    assert run_with_deadline(lambda: 42, 5.0) == 42
+    with pytest.raises(ValueError, match="boom"):
+        run_with_deadline(lambda: (_ for _ in ()).throw(ValueError("boom")),
+                          5.0)
+    # No/zero timeout runs inline.
+    assert run_with_deadline(lambda: "inline", None) == "inline"
+    assert run_with_deadline(lambda: "inline", 0.0) == "inline"
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_deterministic_and_bounded():
+    policy = RetryPolicy(base_delay_s=0.01, multiplier=2.0, max_delay_s=0.05,
+                         jitter=0.5)
+    a = ResilienceConfig(seed=7).jitter_rng()
+    b = ResilienceConfig(seed=7).jitter_rng()
+    seq_a = [policy.backoff(i, a) for i in range(8)]
+    seq_b = [policy.backoff(i, b) for i in range(8)]
+    assert seq_a == seq_b  # same seed -> bit-identical schedule
+    for i, delay in enumerate(seq_a):
+        nominal = min(0.01 * 2.0 ** i, 0.05)
+        assert 0.5 * nominal <= delay <= 1.5 * nominal
+    # A different seed jitters differently.
+    c = ResilienceConfig(seed=8).jitter_rng()
+    assert [policy.backoff(i, c) for i in range(8)] != seq_a
+    # Without jitter the schedule is the pure clipped exponential.
+    plain = RetryPolicy(base_delay_s=0.01, multiplier=2.0, max_delay_s=0.05,
+                        jitter=0.0)
+    assert [plain.backoff(i, a) for i in range(4)] == \
+        [0.01, 0.02, 0.04, 0.05]
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_full_transition_cycle():
+    clock = VirtualClock()
+    br = CircuitBreaker(failure_threshold=3, reset_timeout_s=5.0, clock=clock)
+    assert br.state == CircuitBreaker.CLOSED
+    br.record_failure()
+    br.record_failure()
+    assert br.state == CircuitBreaker.CLOSED and br.allow()
+    br.record_success()  # consecutive-failure counter resets
+    br.record_failure()
+    br.record_failure()
+    br.record_failure()
+    assert br.state == CircuitBreaker.OPEN
+    assert not br.allow()
+    assert br.retry_after() == pytest.approx(5.0)
+    clock.advance(2.0)
+    assert br.retry_after() == pytest.approx(3.0)
+    clock.advance(3.0)  # timer elapses: half-open, exactly one probe
+    assert br.state == CircuitBreaker.HALF_OPEN
+    assert br.allow()
+    assert not br.allow()  # second concurrent probe rejected
+    br.record_success()
+    assert br.state == CircuitBreaker.CLOSED and br.allow()
+
+
+def test_breaker_failed_probe_reopens():
+    clock = VirtualClock()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0, clock=clock)
+    br.record_failure()
+    assert br.state == CircuitBreaker.OPEN
+    clock.advance(5.0)
+    assert br.allow()  # the half-open probe
+    br.record_failure()  # probe fails: back to OPEN, timer restarted
+    assert br.state == CircuitBreaker.OPEN
+    assert br.retry_after() == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_bounded_and_unbounded():
+    adm = AdmissionController(max_depth=3, retry_after_s=0.25)
+    assert adm.try_acquire(2) == 2
+    assert adm.try_acquire(4) == 1  # only one slot left
+    assert adm.shed_total == 3
+    assert adm.try_acquire(1) == 0
+    adm.release(3)
+    assert adm.try_acquire(2) == 2
+    err = adm.overload_error()
+    assert err.code == ErrorCode.OVERLOADED and err.retryable
+    assert err.retry_after_s == 0.25
+    unbounded = AdmissionController(max_depth=0)
+    assert unbounded.try_acquire(1000) == 1000
+    assert unbounded.shed_total == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_seeded_determinism():
+    # Two injectors with the same seed fire on exactly the same calls.
+    a = FaultInjector(seed=42, rates={"stage:cp": 0.3})
+    b = FaultInjector(seed=42, rates={"stage:cp": 0.3})
+    seq_a = [a.should_fire("stage:cp") for _ in range(200)]
+    seq_b = [b.should_fire("stage:cp") for _ in range(200)]
+    assert seq_a == seq_b
+    assert 0 < sum(seq_a) < 200  # the rate actually does something
+    assert a.calls["stage:cp"] == 200
+    assert a.fired["stage:cp"] == sum(seq_a)
+    # A different seed gives a different (still deterministic) pattern.
+    c = FaultInjector(seed=43, rates={"stage:cp": 0.3})
+    assert [c.should_fire("stage:cp") for _ in range(200)] != seq_a
+    # Per-site streams are independent: adding a second site does not
+    # perturb the first one's firing pattern.
+    d = FaultInjector(seed=42, rates={"stage:cp": 0.3, "parse": 0.9})
+    seq_d = []
+    for _ in range(200):
+        d.should_fire("parse")
+        seq_d.append(d.should_fire("stage:cp"))
+    assert seq_d == seq_a
+
+
+def test_fault_injector_scripts_and_unspecced_sites():
+    inj = FaultInjector(seed=0, scripts={"parse": {2, 5}})
+    fires = [inj.should_fire("parse") for _ in range(6)]
+    assert fires == [False, True, False, False, True, False]
+    # Unspecced sites never fire but are still counted (reach assertions).
+    assert not any(inj.should_fire("stage:dag") for _ in range(10))
+    assert inj.calls["stage:dag"] == 10
+    with pytest.raises(InjectedFault) as ei:
+        FaultInjector(scripts={"parse": {1}}).check("parse")
+    assert ei.value.code == ErrorCode.PARSE_ERROR and ei.value.retryable
+    with pytest.raises(InjectedFault) as ei:
+        FaultInjector(scripts={"stage:cp": {1}}, transient=False) \
+            .check("stage:cp")
+    assert ei.value.code == ErrorCode.INTERNAL and not ei.value.retryable
+
+
+def test_fault_injector_timeout_site_advances_virtual_clock():
+    clock = VirtualClock()
+    inj = FaultInjector(scripts={"timeout:dag": {1}}, clock=clock,
+                        advance_s=7.0)
+    inj.check("timeout:dag")  # no raise: the clock jumps instead
+    assert clock.now == pytest.approx(7.0)
+    # Without a clock attached the site degenerates to raising.
+    bare = FaultInjector(scripts={"timeout:dag": {1}})
+    with pytest.raises(InjectedFault) as ei:
+        bare.check("timeout:dag")
+    assert ei.value.code == ErrorCode.STAGE_TIMEOUT
+
+
+# ---------------------------------------------------------------------------
+# service: degradation ladder, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_service_full_rung_matches_plain_path():
+    """With resilience on but nothing going wrong, the answer is the plain
+    path's answer — bit-identical report, no degradation, one attempt."""
+    clock = VirtualClock()
+    plain = AnalysisService()
+    resilient = AnalysisService(resilience=resilient_config(clock))
+    req = AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="gs")
+    a = plain.submit(req)
+    b = resilient.submit(req)
+    assert a.ok and b.ok
+    assert not b.degraded and b.error_code == "" and b.attempts == 1
+    assert b.stages_completed == FULL_STAGES
+    assert a.report.to_dict() == b.report.to_dict()
+    assert clock.sleeps == []  # no retries -> no backoff waits
+
+
+def test_service_degrades_to_tp_only_on_persistent_cp_fault():
+    """A stage fault that survives every retry drops the job one rung: the
+    answer is the optimistic-TP-only analysis, marked DEGRADED."""
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock),
+        faults=FaultInjector(seed=0, rates={"stage:cp": 1.0}))
+    resp = service.submit(
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="gs"))
+    assert resp.ok and resp.degraded
+    assert resp.error_code == ErrorCode.DEGRADED
+    assert resp.stages_completed == ("resolve", "tp")
+    assert resp.report.degraded and resp.report.degradation == "tp_only"
+    assert resp.report.tp_block > 0  # the optimistic bound still answers
+    # 3 attempts at full (all fault at cp) + 1 at tp_only (no cp stage).
+    assert resp.attempts == 4
+    assert service.counters["retries"] == 2
+    assert service.counters["degraded"] == 1
+    assert service.counters["faults_injected"] == 3
+    assert len(clock.sleeps) == 2  # backoffs were simulated, not slept
+
+
+def test_service_degrades_to_parse_only_on_deadline_blowout():
+    """An injected timeout advances the virtual clock past the request
+    deadline; the *real* deadline machinery trips at the stage boundary and
+    the ladder falls to the always-answers parse-only rung."""
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock),
+        faults=FaultInjector(seed=0, rates={"timeout:dag": 1.0}, clock=clock,
+                             advance_s=3600.0))
+    resp = service.submit(
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="gs"))
+    assert resp.ok and resp.degraded
+    assert resp.report.degradation == "parse_only"
+    assert resp.stages_completed == ()
+    assert resp.report.rows  # parse-level rows still present
+    assert resp.report.tp_block == 0.0  # no numbers were computed
+    # full rung timed out; tp_only's first checkpoint saw the dead deadline;
+    # parse_only answered without checkpoints.
+    assert resp.attempts == 3
+
+
+def test_service_min_rung_full_errors_instead_of_degrading():
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock, min_rung="full"),
+        faults=FaultInjector(seed=0, rates={"stage:tp": 1.0}))
+    resp = service.submit(
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="gs"))
+    assert not resp.ok and resp.report is None
+    assert resp.error_code == ErrorCode.INTERNAL  # injected transient fault
+    assert resp.retryable
+    assert resp.attempts == 3  # retried, never degraded
+
+
+def test_service_stage_budget_triggers_degradation():
+    """Per-stage budgets: a stage that (virtually) overruns stage_timeout_s
+    is caught at the next checkpoint; persistent overruns degrade."""
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock, stage_timeout_s=0.1,
+                                    request_timeout_s=100.0),
+        faults=FaultInjector(seed=0, scripts={"timeout:dag": {1, 2, 3}},
+                             clock=clock, advance_s=0.2))
+    resp = service.submit(
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="gs"))
+    assert resp.ok and resp.degraded
+    assert resp.report.degradation == "tp_only"  # tp_only has no dag stage
+    assert service.counters["retries"] == 2
+    assert clock.sleeps and len(clock.sleeps) == 2
+
+
+# ---------------------------------------------------------------------------
+# service: backpressure + breaker
+# ---------------------------------------------------------------------------
+
+
+def test_service_sheds_load_beyond_queue_depth():
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock, max_queue_depth=2,
+                                    retry_after_s=0.25))
+    reqs = [AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name=f"r{i}")
+            for i in range(5)]
+    responses = service.submit_batch(reqs)
+    assert [r.ok for r in responses] == [True, True, False, False, False]
+    for shed in responses[2:]:
+        assert shed.error_code == ErrorCode.OVERLOADED
+        assert shed.retryable and shed.retry_after_s == 0.25
+        assert shed.attempts == 0  # never reached the backend
+    assert service.counters["shed"] == 3
+    # Slots were released at the end of the wave: the next wave is admitted.
+    again = service.submit_batch(reqs[:2])
+    assert all(r.ok for r in again)
+
+
+def test_service_breaker_opens_then_recovers():
+    """Consecutive backend failures trip the per-arch breaker OPEN; its
+    requests are rejected with a retry_after; after the reset timer a probe
+    goes through and, succeeding, closes the breaker again."""
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock, min_rung="full",
+                                    breaker_failure_threshold=2,
+                                    breaker_reset_s=30.0),
+        # Exactly the first two jobs' attempts fail (3 retried attempts
+        # each); later calls never fire, so the probe can succeed.
+        faults=FaultInjector(seed=0, scripts={"stage:tp": set(range(1, 7))}))
+
+    def one(name):
+        return service.submit(
+            AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name=name))
+
+    assert one("j1").error_code == ErrorCode.INTERNAL  # failure 1
+    assert one("j2").error_code == ErrorCode.INTERNAL  # failure 2 -> OPEN
+    rejected = one("j3")
+    assert rejected.error_code == ErrorCode.OVERLOADED
+    assert "circuit breaker open" in rejected.error
+    assert rejected.retryable and rejected.retry_after_s == pytest.approx(30.0)
+    assert rejected.attempts == 0
+    assert service.counters["breaker_rejected"] == 1
+    assert service.breaker_for("tx2").state == CircuitBreaker.OPEN
+
+    clock.advance(30.0)  # reset timer elapses: half-open
+    probe = one("j4")  # the single probe; faults are exhausted -> succeeds
+    assert probe.ok and not probe.degraded
+    assert service.breaker_for("tx2").state == CircuitBreaker.CLOSED
+    assert one("j5").ok  # traffic flows again (served from cache, even)
+
+
+def test_service_degraded_answer_counts_as_breaker_failure():
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock, breaker_failure_threshold=2),
+        faults=FaultInjector(seed=0, rates={"stage:cp": 1.0}))
+    for i in range(2):
+        resp = service.submit(AnalysisRequest(
+            asm=GS_TX2_ASM, arch="tx2", name=f"d{i}"))
+        assert resp.ok and resp.degraded  # answered, but degraded
+    # Two forced degradations = two backend failures: breaker is OPEN.
+    assert service.breaker_for("tx2").state == CircuitBreaker.OPEN
+    assert service.submit(AnalysisRequest(
+        asm=GS_TX2_ASM, arch="tx2", name="d2")).error_code == \
+        ErrorCode.OVERLOADED
+
+
+def test_service_client_errors_do_not_trip_breaker():
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock, breaker_failure_threshold=1),
+        # A *permanent* parse failure: the caller's malformed kernel.
+        faults=FaultInjector(seed=0, scripts={"parse": {1}},
+                             transient=False))
+    bad = service.submit(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                         name="bad"))
+    assert not bad.ok and bad.error_code == ErrorCode.PARSE_ERROR
+    assert not bad.retryable
+    # The caller's malformed kernel is not the backend's failure.
+    assert service.breaker_for("tx2").state == CircuitBreaker.CLOSED
+    # Unknown archs are client errors too: no breaker, no trip.
+    unknown = service.submit(AnalysisRequest(asm="x", arch="not-a-machine"))
+    assert unknown.error_code == ErrorCode.UNKNOWN_ARCH
+    assert not unknown.retryable
+
+
+# ---------------------------------------------------------------------------
+# service: cache hygiene under faults
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_results_are_never_cached():
+    """Satellite guarantee: a degraded answer is served but *not* stored —
+    once the fault clears, the same request gets the full report again."""
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock),
+        faults=FaultInjector(seed=0, rates={"stage:cp": 1.0}))
+    req = AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="gs")
+    first = service.submit(req)
+    assert first.degraded
+    service.faults = None  # the "outage" ends
+    second = service.submit(req)
+    assert second.ok and not second.degraded
+    assert second.stages_completed == FULL_STAGES
+    # Nothing degraded was ever served from cache (misses count cache
+    # *insertions*: only the second, full answer was stored).
+    assert service.stats["hits"] == 0 and service.stats["misses"] == 1
+    # The now-cached entry is the full result.
+    third = service.submit(req)
+    assert third.ok and not third.degraded
+    assert service.stats["hits"] == 1
+
+
+def test_transient_errors_are_not_negative_cached():
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock),
+        faults=FaultInjector(seed=0, scripts={"parse": {1}}))
+    req = AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="gs")
+    first = service.submit(req)
+    assert not first.ok and first.retryable  # injected transient parse fault
+    second = service.submit(req)  # script exhausted: the retry succeeds
+    assert second.ok and not second.degraded
+    assert service.stats["hits"] == 0  # the error was never served from cache
+
+
+def test_permanent_errors_are_negative_cached():
+    clock = VirtualClock()
+    faults = FaultInjector(seed=0, scripts={"parse": {1}}, transient=False)
+    service = AnalysisService(resilience=resilient_config(clock),
+                              faults=faults)
+    req = AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="bad")
+    first = service.submit(req)
+    assert not first.ok and not first.retryable
+    assert first.error_code == ErrorCode.PARSE_ERROR
+    second = service.submit(req)  # script exhausted, but the error is cached
+    assert not second.ok and second.error_code == first.error_code
+    assert service.stats["hits"] == 1  # served from the negative cache
+    assert faults.calls["parse"] == 1  # never re-parsed
+
+
+def test_cache_eviction_fault_forces_reanalysis():
+    clock = VirtualClock()
+    faults = FaultInjector(seed=0, scripts={"cache": {2}})
+    service = AnalysisService(resilience=resilient_config(clock),
+                              faults=faults)
+    req = AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="gs")
+    assert service.submit(req).ok
+    assert service.submit(req).ok  # eviction fired: recomputed, same answer
+    assert faults.fired.get("cache") == 1
+    assert service.stats["misses"] == 2 and service.stats["hits"] == 0
+    assert service.submit(req).ok
+    assert service.stats["hits"] == 1  # back to normal caching
+
+
+# ---------------------------------------------------------------------------
+# wire contract
+# ---------------------------------------------------------------------------
+
+
+def test_v1_envelopes_still_parse():
+    """PR-2 (v1) payloads predate the taxonomy fields; they must round-trip
+    with sensible defaults."""
+    v1_err = {"version": 1, "ok": False, "name": "k", "arch": "tx2",
+              "error": "ValueError: bad operand", "report": None}
+    resp = AnalysisResponse.from_dict(v1_err)
+    assert not resp.ok
+    assert resp.error_code == ErrorCode.INTERNAL  # default for v1 errors
+    assert resp.error == "ValueError: bad operand"  # free text preserved
+    assert not resp.retryable and not resp.degraded
+    v1_ok = {"version": 1, "ok": True, "name": "k", "arch": "tx2",
+             "error": "", "report": None}
+    ok = AnalysisResponse.from_dict(v1_ok)
+    assert ok.ok and ok.error_code == "" and ok.attempts == 1
+    v1_req = {"asm": "fadd d0, d0, d1", "arch": "tx2"}
+    req = AnalysisRequest.from_dict(v1_req)
+    assert req.timeout_s == 0.0 and req.version == API_VERSION
+
+
+def test_v2_envelope_roundtrip_with_degradation():
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=resilient_config(clock),
+        faults=FaultInjector(seed=0, rates={"stage:cp": 1.0}))
+    resp = service.submit(
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="gs"))
+    wire = resp.to_dict()
+    assert wire["version"] == API_VERSION
+    back = AnalysisResponse.from_dict(wire)
+    assert back.degraded and back.error_code == ErrorCode.DEGRADED
+    assert back.stages_completed == resp.stages_completed
+    assert back.report.to_dict() == resp.report.to_dict()
+
+
+def test_request_timeout_excluded_from_cache_key():
+    a = AnalysisRequest(asm=GS_CLX_ASM, arch="csx", timeout_s=0.5)
+    b = AnalysisRequest(asm=GS_CLX_ASM, arch="cascadelake", timeout_s=2.0)
+    assert a.key == b.key  # alias-canonical and timeout-blind
+
+
+# ---------------------------------------------------------------------------
+# facade: analyze(..., timeout_s=, degrade=)
+# ---------------------------------------------------------------------------
+
+
+def test_api_analyze_degrades_on_expired_deadline():
+    from repro.api import analyze
+
+    report = analyze(GS_TX2_ASM, arch="tx2", timeout_s=0.0, degrade=True)
+    assert report.degraded and report.degradation == "parse_only"
+    assert report.rows
+
+
+def test_api_analyze_raises_without_degrade():
+    from repro.api import analyze
+
+    with pytest.raises(StageTimeout):
+        analyze(GS_TX2_ASM, arch="tx2", timeout_s=0.0)
+
+
+def test_api_analyze_under_generous_deadline_is_bit_identical():
+    from repro.api import analyze
+
+    plain = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    bounded = analyze(GS_TX2_ASM, arch="tx2", unroll=4, timeout_s=60.0,
+                      degrade=True)
+    assert not bounded.degraded
+    assert bounded.to_dict() == plain.to_dict()

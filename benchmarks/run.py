@@ -9,6 +9,10 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   analysis_service     — serving-path req/s + cache hit rate on a hot trace
   resilience           — resilient path req/s + p99 with 1% faults vs none;
                          appends to the BENCH_serving.json trajectory
+  sim_steadystate      — window-limited OoO simulator: steady-state cy/it on
+                         the Gauss-Seidel kernels (all five machines) plus
+                         wall-time scaling on 32/128/512-instr synthetics;
+                         appends to the BENCH_analysis.json trajectory
   ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
   hlo_roofline         — HLO parse + three-term roofline on a compiled step
   train_step_tiny      — end-to-end tiny train step wall time
@@ -274,6 +278,99 @@ def resilience() -> None:
     path.write_text(json.dumps(doc, indent=2) + "\n")
 
 
+def _synthetic_kernel_x86(n: int):
+    """Mixed FP / load / store / pointer-bump x86 kernel (AT&T syntax),
+    the x86 twin of :func:`_synthetic_kernel`."""
+    from repro.core import parse_x86
+
+    lines, regs = [], 8
+    for i in range(n):
+        if i % 7 == 3:
+            lines.append(f"movsd {8 * (i % 16)}(%rsi,%rbx,8), %xmm{i % regs}")
+        elif i % 11 == 5:
+            lines.append(f"movsd %xmm{(i + 1) % regs}, {8 * (i % 16)}(%rax)")
+        elif i % 5 == 2:
+            lines.append("addq $8, %rdx")
+        else:
+            lines.append(f"vaddsd %xmm{i % regs}, %xmm{(i + 1) % regs}, "
+                         f"%xmm{(i + 2) % regs}")
+    return parse_x86(
+        "# OSACA-BEGIN\n" + "\n".join(lines) + "\n# OSACA-END",
+        name=f"synthetic-x86-{n}")
+
+
+def sim_steadystate() -> None:
+    """Window-limited OoO simulator cost and predictions.
+
+    Per machine: the Gauss-Seidel sample kernel's steady-state point
+    prediction (cy/it at 4x unroll, with the bracket it must sit inside and
+    the copies-to-convergence count), then simulator wall time on growing
+    synthetic kernels.  The run is appended to ``BENCH_analysis.json`` so the
+    simulator's speed *and* its predictions are tracked per PR — a silent
+    prediction shift is as much a regression as a slowdown.
+    """
+    import json
+    from pathlib import Path
+
+    from repro.core import analyze_kernel, thunderx2, cascade_lake, zen
+    from repro.core.machine import neoverse_n1, zen2
+    from repro.core.registry import get_arch
+    from repro.core.sim import simulate_kernel
+
+    entry = {"bench": "sim_steadystate", "gauss_seidel": {}, "scaling": {}}
+    for arch, mk in [("tx2", thunderx2), ("csx", cascade_lake), ("zen", zen),
+                     ("zen2", zen2), ("n1", neoverse_n1)]:
+        spec = get_arch(arch)
+        kernel = spec.parser(spec.sample_asm, name="gauss-seidel")
+        model = mk()
+        us = _timeit(lambda: simulate_kernel(kernel, model), repeats=5,
+                     warmup=1)
+        a = analyze_kernel(kernel, model, unroll=4)
+        sim = a.sim
+        inside = (a.tp.balanced_throughput - 1e-9 <= sim.cy_per_block
+                  <= max(a.cp.length, a.tp.balanced_throughput) + 1e-9)
+        assert inside, f"{arch}: sim escaped the [TP, CP] bracket"
+        derived = (f"sim={a.sim_per_it:.2f}cy/it;"
+                   f"tp={a.tp_balanced_per_it:.2f};cp={a.cp_per_it:.2f};"
+                   f"copies={sim.copies};converged={sim.converged};"
+                   f"limiter={sim.limiter}")
+        _row(f"sim_steadystate_{arch}", us, derived)
+        entry["gauss_seidel"][arch] = {
+            "sim_cy_per_it": round(a.sim_per_it, 4),
+            "tp_cy_per_it": round(a.tp_balanced_per_it, 4),
+            "cp_cy_per_it": round(a.cp_per_it, 4),
+            "copies": sim.copies, "converged": sim.converged,
+            "limiter": sim.limiter, "us_per_sim": round(us, 1),
+        }
+
+    scaling_models = [("tx2", thunderx2(), _synthetic_kernel),
+                      ("csx", cascade_lake(), _synthetic_kernel_x86)]
+    for arch, model, make in scaling_models:
+        per_arch = {}
+        for n in (32, 128, 512):
+            kernel = make(n)
+            us = _timeit(lambda: simulate_kernel(kernel, model), repeats=3,
+                         warmup=1)
+            result = simulate_kernel(kernel, model)
+            _row(f"sim_steadystate_scale_{arch}_{n}", us,
+                 f"n={n};cy_block={result.cy_per_block:.1f};"
+                 f"copies={result.copies}")
+            per_arch[str(n)] = {"us_per_sim": round(us, 1),
+                                "cy_per_block": round(result.cy_per_block, 2),
+                                "copies": result.copies}
+        entry["scaling"][arch] = per_arch
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_analysis.json"
+    doc = {"benchmark": "analysis", "entries": []}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            pass
+    doc["entries"].append(entry)
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def ibench_pipeline() -> None:
     import jax.numpy as jnp
     from repro.core.bench import populate_entry
@@ -364,7 +461,8 @@ def main(argv=None) -> None:
     table = {fn.__name__: fn for fn in (
         table1_gauss_seidel, table2_tx2_detail, analyzer_throughput,
         analyzer_scaling, scheduler_balance, analysis_service, resilience,
-        ibench_pipeline, hlo_roofline, train_step_tiny, decode_step_tiny)}
+        sim_steadystate, ibench_pipeline, hlo_roofline, train_step_tiny,
+        decode_step_tiny)}
     unknown = [n for n in names if n not in table]
     if unknown:
         raise SystemExit(

@@ -6,16 +6,56 @@ Usage:
 ``--arch`` accepts any id or alias from the architecture registry
 (``tx2``/``csx``/``zen``/``zen2``/``n1``, ``cascadelake``, ``graviton2``, …);
 ``--format json`` emits the stable ``AnalysisReport`` schema instead of the
-Table-II text report.
+Table-II text report.  ``--predictors tp,cp`` restricts the analysis to a
+subset of the four predictors (``tp``/``cp``/``lcd``/``sim``).
 
 Markers: wrap the loop body in ``# OSACA-BEGIN`` / ``# OSACA-END`` comments,
 use IACA byte markers, or let the tool auto-detect the innermost loop.
-Without a file argument, analyzes the built-in Gauss-Seidel kernels.
+Without a file argument, analyzes the built-in Gauss-Seidel kernels on
+*every* machine model and prints the three-way comparison — throughput
+bounds, the window-limited OoO point prediction, and the critical path —
+before the detailed report for ``--arch``.
 """
 
 import argparse
 
 from repro.api import analyze, asm_arch_ids, get_arch
+
+
+def _summary_rows(report):
+    """(label, cy/it) rows: the bracket plus the point predictions inside."""
+    rows = [("TP (optimistic)", report.tp_block / report.unroll),
+            ("TP (balanced)", report.tp_balanced_block / report.unroll)]
+    if report.lcd_block:
+        rows.append(("LCD (expected)", report.lcd_per_it))
+    if report.sim_per_it is not None:
+        rows.append(("sim (point)", report.sim_per_it))
+    rows.append(("CP (upper)", report.cp_per_it))
+    return rows
+
+
+def _print_footer(report) -> None:
+    ghz = report.frequency_ghz
+    for label, cy in _summary_rows(report):
+        print(f"{label:>16}: {cy:7.2f} cy/it = {cy / ghz:7.2f} ns/it "
+              f"@ {ghz} GHz")
+
+
+def _print_all_arches(unroll, predictors) -> None:
+    print(f"{'arch':>6}  {'TP(opt)':>8}  {'TP(bal)':>8}  {'sim':>8}  "
+          f"{'CP':>8}   cy/it on the built-in Gauss-Seidel kernel")
+    for arch_id in asm_arch_ids():
+        spec = get_arch(arch_id)
+        if spec.sample_asm is None:
+            continue
+        report = analyze(spec.sample_asm, arch=arch_id, unroll=unroll,
+                         name="gauss-seidel", predictors=predictors)
+        sim = (f"{report.sim_per_it:8.2f}" if report.sim_per_it is not None
+               else f"{'-':>8}")
+        print(f"{arch_id:>6}  {report.tp_block / report.unroll:8.2f}  "
+              f"{report.tp_balanced_block / report.unroll:8.2f}  {sim}  "
+              f"{report.cp_per_it:8.2f}")
+    print()
 
 
 def main() -> None:
@@ -27,12 +67,17 @@ def main() -> None:
     ap.add_argument("--unroll", type=int, default=4)
     ap.add_argument("--format", default="text",
                     choices=("text", "json", "markdown"))
+    ap.add_argument("--predictors", default="",
+                    help="comma-separated subset of tp,cp,lcd,sim "
+                         "(empty = all four)")
     args = ap.parse_args()
 
     try:
         spec = get_arch(args.arch)
     except ValueError as exc:
         ap.error(str(exc))
+    predictors = (tuple(p.strip() for p in args.predictors.split(",")
+                        if p.strip()) or None)
     if args.file:
         with open(args.file) as f:
             asm = f.read()
@@ -41,15 +86,19 @@ def main() -> None:
         if spec.sample_asm is None:
             ap.error(f"arch '{spec.id}' has no built-in kernel; pass a file")
         asm, name = spec.sample_asm, "gauss-seidel"
+        if args.format == "text":
+            _print_all_arches(args.unroll, predictors)
 
-    report = analyze(asm, arch=spec.id, unroll=args.unroll, name=name)
+    try:
+        report = analyze(asm, arch=spec.id, unroll=args.unroll, name=name,
+                         predictors=predictors)
+    except ValueError as exc:  # bad --predictors entry
+        ap.error(str(exc))
     print(report.render(args.format))
     if args.format != "text" or report.kind != "asm":
         return  # HLO reports are already in seconds; no cycle→ns footer
     print()
-    ghz = report.frequency_ghz
-    for key, cy in report.prediction_bracket().items():
-        print(f"{key:>16}: {cy:7.2f} cy/it = {cy / ghz:7.2f} ns/it @ {ghz} GHz")
+    _print_footer(report)
 
 
 if __name__ == "__main__":

@@ -118,17 +118,22 @@ def _coerce_kernel(source, spec: ArchSpec, name: Optional[str]) -> Kernel:
 
 def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
                 name: Optional[str] = None, timeout_s: Optional[float] = None,
-                degrade: bool = False) -> Analysis:
+                degrade: bool = False, predictors=None) -> Analysis:
     """Like :func:`analyze` but returning the live assembly-pipeline
     :class:`Analysis` (kernel/model objects attached).  Asm targets only.
 
     ``timeout_s`` puts the analysis under a deadline checked at every stage
     boundary; with ``degrade=True`` an expired deadline (or a failed stage)
-    falls down the degradation ladder — full → optimistic-TP-only →
-    parse-only — instead of raising, and the returned analysis carries
-    ``degradation`` / ``stages_completed`` saying which rung answered.
-    Without ``degrade``, a timeout raises
+    falls down the degradation ladder — full → bracket (no simulator) →
+    optimistic-TP-only → parse-only — instead of raising, and the returned
+    analysis carries ``degradation`` / ``stages_completed`` saying which
+    rung answered.  Without ``degrade``, a timeout raises
     :class:`repro.serving.resilience.StageTimeout`.
+
+    ``predictors`` selects a subset of ``("tp", "cp", "lcd", "sim")``;
+    the default computes all four (see
+    :func:`repro.core.analysis.normalize_predictors` for the implication
+    rules).
     """
     spec = get_arch(arch)
     if spec.is_hlo:
@@ -139,19 +144,20 @@ def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
         raise ValueError(f"unroll must be >= 1, got {unroll}")
     kernel = _coerce_kernel(source, spec, name)
     if timeout_s is None and not degrade:
-        return analyze_kernels([kernel], model_for(spec), unroll=unroll)[0]
+        return analyze_kernels([kernel], model_for(spec), unroll=unroll,
+                               predictors=predictors)[0]
     from repro.core.analysis import analyze_kernel_ladder
     from repro.serving.resilience import Deadline
     checkpoint = (Deadline.after(timeout_s).check
                   if timeout_s is not None else None)
     return analyze_kernel_ladder(
         kernel, model_for(spec), unroll, checkpoint=checkpoint,
-        min_rung="parse_only" if degrade else "full")
+        min_rung="parse_only" if degrade else "full", predictors=predictors)
 
 
 def analyze(source, arch: str = "tx2", unroll: int = 1,
             name: Optional[str] = None, timeout_s: Optional[float] = None,
-            degrade: bool = False) -> AnalysisReport:
+            degrade: bool = False, predictors=None) -> AnalysisReport:
     """Analyze a kernel and return the serializable :class:`AnalysisReport`.
 
     ``source`` may be assembly text, a ``.s``/``.asm`` file path, a parsed
@@ -163,6 +169,11 @@ def analyze(source, arch: str = "tx2", unroll: int = 1,
     deadline and, when degrading, answer with a cheaper ladder rung instead
     of failing — the report's ``degraded`` / ``stages_completed`` fields say
     which rung produced it.
+
+    ``predictors`` (asm targets only) selects a subset of
+    ``("tp", "cp", "lcd", "sim")``; the report carries ``None``/zero for
+    predictors that were not requested.  HLO sources reject the parameter —
+    the simulator and bracket selection are asm-pipeline concepts.
     """
     spec = get_arch(arch)
     # Read path sources up front so the HLO sniff sees file *contents*, not
@@ -178,12 +189,17 @@ def analyze(source, arch: str = "tx2", unroll: int = 1,
             f"'HloModule', a parsed HLOModule, a Compiled, or a file path); "
             f"got {got}")
     if spec.is_hlo or _looks_like_hlo(source):
+        if predictors is not None:
+            raise ValueError(
+                "predictors= applies to asm targets only; HLO analyses "
+                "always report the roofline/CP/LCD set")
         chip = model_for(spec) if spec.is_hlo else None
         hlo_arch = spec.id if spec.is_hlo else "tpu-v5e"
         return AnalysisReport.from_hlo(source, chip=chip, arch=hlo_arch,
                                        name=name)
     return analyze_raw(source, arch=arch, unroll=unroll, name=name,
-                       timeout_s=timeout_s, degrade=degrade).to_report()
+                       timeout_s=timeout_s, degrade=degrade,
+                       predictors=predictors).to_report()
 
 
 def __getattr__(attr):

@@ -1,13 +1,22 @@
-"""Combined OSACA analysis: TP + CP + LCD with a Table-II-style report.
+"""Combined OSACA analysis: TP + CP + LCD + sim with a Table-II-style report.
 
 Single-sweep pipeline: one ``resolve_kernel`` and one dual-writeback 2-copy
-DAG build are shared across all three analyses — TP accumulates pressure from
-the resolved costs, LCD runs the batched all-sources sweep over the DAG's
-split-writeback view, and CP reuses the same DAG's copy-0 data-chained view.
+DAG build are shared across all analyses — TP accumulates pressure from the
+resolved costs, LCD runs the batched all-sources sweep over the DAG's
+split-writeback view, CP reuses the same DAG's copy-0 data-chained view, and
+the window-limited OoO simulator (:mod:`repro.core.sim`) replays the same
+DAG as its replication template to close the [TP, CP] bracket with a point
+prediction.
+
+``predictors=`` selects a subset of ``("tp", "cp", "lcd", "sim")``: the DAG
+is only built when a DAG-consuming predictor is requested, TP is always
+computed (per-instruction rows need it), and ``sim`` implies ``cp`` (the
+point prediction is clamped into the bracket).
 
 ``analyze_kernels`` is the batch entry point (one warm model cache across
-kernels, process-level LRU keyed by kernel text + model name + unroll) for
-serving paths that analyze many — often repeated — kernels concurrently.
+kernels, process-level LRU keyed by kernel text + model name + unroll +
+predictors) for serving paths that analyze many — often repeated — kernels
+concurrently.
 """
 
 from __future__ import annotations
@@ -26,21 +35,52 @@ from repro.core.analysis.throughput import (ThroughputResult,
                                             throughput_from_costs)
 from repro.core.isa.instruction import Kernel
 from repro.core.machine.model import MachineModel
+from repro.core.sim.engine import SimResult, simulate_from_dag
 
 
 #: Pipeline stages in execution order; the degradation ladder cuts suffixes.
-ANALYSIS_STAGES: Tuple[str, ...] = ("resolve", "tp", "dag", "cp", "lcd")
+ANALYSIS_STAGES: Tuple[str, ...] = ("resolve", "tp", "dag", "cp", "lcd", "sim")
 
 #: Degradation rungs, most complete first.  ``full`` is TP(both bounds) +
-#: CP + LCD; ``tp_only`` is the optimistic full-throughput model alone
-#: (no DAG, no scheduler); ``parse_only`` answers with parse-level facts only.
-DEGRADATION_LADDER: Tuple[str, ...] = ("full", "tp_only", "parse_only")
+#: CP + LCD + the window-limited simulator; ``bracket`` drops the simulator
+#: (the legacy [TP, CP] + LCD answer); ``tp_only`` is the optimistic
+#: full-throughput model alone (no DAG, no scheduler); ``parse_only``
+#: answers with parse-level facts only.
+DEGRADATION_LADDER: Tuple[str, ...] = ("full", "bracket", "tp_only",
+                                       "parse_only")
 
 _RUNG_STAGES: Dict[str, Tuple[str, ...]] = {
     "full": ANALYSIS_STAGES,
+    "bracket": ("resolve", "tp", "dag", "cp", "lcd"),
     "tp_only": ("resolve", "tp"),
     "parse_only": (),
 }
+
+#: Selectable predictors for ``analyze_kernel(..., predictors=...)``.
+PREDICTORS: Tuple[str, ...] = ("tp", "cp", "lcd", "sim")
+
+
+def normalize_predictors(predictors) -> Tuple[str, ...]:
+    """Canonical predictor subset: validated, ordered, with implied members.
+
+    ``None`` or an empty selection means *all* predictors.  ``tp`` is always
+    included (the per-instruction rows and every rung need it) and ``sim``
+    implies ``cp`` — the simulator's point prediction is clamped into the
+    [TP, CP] bracket, so it needs the upper bound.
+    """
+    if predictors is None:
+        return PREDICTORS
+    requested = set(predictors)
+    if not requested:
+        return PREDICTORS
+    unknown = requested - set(PREDICTORS)
+    if unknown:
+        raise ValueError(f"unknown predictors {sorted(unknown)}; "
+                         f"known: {PREDICTORS}")
+    requested.add("tp")
+    if "sim" in requested:
+        requested.add("cp")
+    return tuple(p for p in PREDICTORS if p in requested)
 
 
 @dataclass
@@ -53,6 +93,9 @@ class Analysis:
     tp: Optional[ThroughputResult]
     cp: Optional[CriticalPathResult]
     lcd: Optional[LCDResult]
+    # Window-limited OoO point prediction; ``None`` when not requested, when
+    # the rung dropped it, or when the machine has no window parameters.
+    sim: Optional[SimResult] = None
     degradation: str = "full"  # ladder rung that produced this analysis
     stages_completed: Tuple[str, ...] = ANALYSIS_STAGES
 
@@ -80,6 +123,10 @@ class Analysis:
     def lcd_per_it(self) -> float:
         return self.lcd.per_iteration(self.unroll) if self.lcd else 0.0
 
+    @property
+    def sim_per_it(self) -> float:
+        return self.sim.per_iteration(self.unroll) if self.sim else 0.0
+
     def prediction_bracket(self) -> Dict[str, float]:
         """[TP, CP] runtime bracket with the LCD as the expected value."""
         return {
@@ -103,27 +150,57 @@ class Analysis:
 
 
 def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1,
-                   checkpoint: Optional[Callable[[str], None]] = None) -> Analysis:
-    """Full TP/CP/LCD analysis: one cost resolution, one DAG build.
+                   checkpoint: Optional[Callable[[str], None]] = None,
+                   predictors=None) -> Analysis:
+    """Full TP/CP/LCD/sim analysis: one cost resolution, one DAG build.
 
     ``checkpoint(stage)`` — when given — is called at every stage boundary
     (before the stage runs) and may raise to cancel the analysis: the serving
     path passes a deadline/fault-injection check so an expired request stops
     at the next boundary instead of finishing a report nobody is waiting for.
+    The ``sim`` stage additionally re-checks once per simulated body copy, so
+    a deadline can cancel *inside* the most expensive stage.
+
+    ``predictors`` selects a subset of :data:`PREDICTORS`
+    (see :func:`normalize_predictors`); the default runs everything.  The
+    simulator is skipped — without error — on machines with no
+    ``window`` parameters; ``stages_completed`` records what actually ran.
     """
+    preds = normalize_predictors(predictors)
     check = checkpoint or _no_checkpoint
+    stages: List[str] = []
     check("resolve")
     costs = model.resolve_kernel(kernel)
+    stages.append("resolve")
     check("tp")
     tp = throughput_from_costs(costs, model)
-    check("dag")
-    dag = build_dag(kernel, model, copies=2, dual_writeback=True, costs=costs)
-    check("cp")
-    cp = critical_path_from_dag(dag)
-    check("lcd")
-    lcd = lcd_from_dag(dag, len(kernel))
+    stages.append("tp")
+    cp = lcd = sim = None
+    dag = None
+    if any(p in preds for p in ("cp", "lcd", "sim")):
+        check("dag")
+        dag = build_dag(kernel, model, copies=2, dual_writeback=True,
+                        costs=costs)
+        stages.append("dag")
+    if "cp" in preds:
+        check("cp")
+        cp = critical_path_from_dag(dag)
+        stages.append("cp")
+    if "lcd" in preds:
+        check("lcd")
+        lcd = lcd_from_dag(dag, len(kernel))
+        stages.append("lcd")
+    if "sim" in preds and model.window is not None:
+        check("sim")
+        sim = simulate_from_dag(dag, model,
+                                tp_block=tp.balanced_throughput,
+                                cp_block=cp.length if cp is not None else None,
+                                cancel=(lambda: check("sim"))
+                                if checkpoint is not None else None)
+        stages.append("sim")
     return Analysis(kernel=kernel, model=model, unroll=unroll,
-                    tp=tp, cp=cp, lcd=lcd)
+                    tp=tp, cp=cp, lcd=lcd, sim=sim,
+                    stages_completed=tuple(stages))
 
 
 def _no_checkpoint(stage: str) -> None:
@@ -131,6 +208,22 @@ def _no_checkpoint(stage: str) -> None:
 
 
 # -- degradation ladder ------------------------------------------------------
+
+
+def analyze_kernel_bracket(kernel: Kernel, model: MachineModel,
+                           unroll: int = 1,
+                           checkpoint: Optional[Callable[[str], None]] = None,
+                           predictors=None) -> Analysis:
+    """Rung 2: the legacy [TP, CP] + LCD bracket without the simulator.
+
+    Same single-sweep pipeline as ``full`` minus the ``sim`` stage — the
+    fallback when the point prediction times out or faults.
+    """
+    preds = normalize_predictors(predictors)
+    bracket_preds = tuple(p for p in preds if p != "sim") or ("tp",)
+    analysis = analyze_kernel(kernel, model, unroll, checkpoint=checkpoint,
+                              predictors=bracket_preds)
+    return replace(analysis, degradation="bracket")
 
 
 def analyze_kernel_tp_only(kernel: Kernel, model: MachineModel,
@@ -171,10 +264,17 @@ def analyze_kernel_parse_only(kernel: Kernel, model: MachineModel,
 def analyze_kernel_rung(kernel: Kernel, model: MachineModel, unroll: int = 1,
                         rung: str = "full",
                         checkpoint: Optional[Callable[[str], None]] = None,
-                        ) -> Analysis:
-    """Run exactly one ladder rung (``full`` / ``tp_only`` / ``parse_only``)."""
+                        predictors=None) -> Analysis:
+    """Run exactly one ladder rung (``full`` / ``bracket`` / ``tp_only`` /
+    ``parse_only``).  ``predictors`` filters the ``full`` and ``bracket``
+    rungs; the cheaper rungs are already fixed subsets."""
     if rung == "full":
-        return analyze_kernel(kernel, model, unroll, checkpoint=checkpoint)
+        return analyze_kernel(kernel, model, unroll, checkpoint=checkpoint,
+                              predictors=predictors)
+    if rung == "bracket":
+        return analyze_kernel_bracket(kernel, model, unroll,
+                                      checkpoint=checkpoint,
+                                      predictors=predictors)
     if rung == "tp_only":
         return analyze_kernel_tp_only(kernel, model, unroll,
                                       checkpoint=checkpoint)
@@ -186,7 +286,8 @@ def analyze_kernel_rung(kernel: Kernel, model: MachineModel, unroll: int = 1,
 
 def analyze_kernel_ladder(kernel: Kernel, model: MachineModel, unroll: int = 1,
                           checkpoint: Optional[Callable[[str], None]] = None,
-                          min_rung: str = "parse_only") -> Analysis:
+                          min_rung: str = "parse_only",
+                          predictors=None) -> Analysis:
     """Walk the degradation ladder: try each rung down to ``min_rung``.
 
     A rung that raises (deadline expiry at a stage boundary, injected fault,
@@ -203,7 +304,8 @@ def analyze_kernel_ladder(kernel: Kernel, model: MachineModel, unroll: int = 1,
     for rung in DEGRADATION_LADDER[:floor + 1]:
         try:
             return analyze_kernel_rung(kernel, model, unroll, rung=rung,
-                                       checkpoint=checkpoint)
+                                       checkpoint=checkpoint,
+                                       predictors=predictors)
         except Exception as exc:  # noqa: BLE001 — fall one rung
             last_error = exc
     assert last_error is not None
@@ -282,9 +384,10 @@ def _form_text(form) -> str:
             f"|L{_mem_sig(form.loads)}|S{_mem_sig(form.stores)}")
 
 
-def _cache_key(kernel: Kernel, model: MachineModel, unroll: int) -> tuple:
+def _cache_key(kernel: Kernel, model: MachineModel, unroll: int,
+               predictors: Tuple[str, ...] = PREDICTORS) -> tuple:
     text = "\n".join(_form_text(form) for form in kernel)
-    return (model.name, kernel.isa, unroll, text)
+    return (model.name, kernel.isa, unroll, predictors, text)
 
 
 def clear_analysis_cache() -> None:
@@ -296,15 +399,16 @@ def analyze_kernels(
     model: MachineModel,
     unroll: int = 1,
     use_cache: bool = True,
+    predictors=None,
 ) -> List[Analysis]:
     """Analyze a batch of kernels against one machine model.
 
     Repeated kernel texts (the common case on a serving path: many requests
     for the same hot loop) hit a process-level LRU keyed by
-    ``(model name, isa, unroll, kernel text)``; all misses share the model's
-    warm instruction-lookup memo, so a batch of *n* distinct kernels pays the
-    instruction-DB probing cost once per distinct instruction form, not once
-    per occurrence.
+    ``(model name, isa, unroll, predictors, kernel text)``; all misses share
+    the model's warm instruction-lookup memo, so a batch of *n* distinct
+    kernels pays the instruction-DB probing cost once per distinct
+    instruction form, not once per occurrence.
 
     Cache-identity caveat: machine models are assumed immutable after
     construction and distinguished by ``model.name`` (mutating a model's DB
@@ -312,17 +416,20 @@ def analyze_kernels(
     hit returns a per-request *view* carrying the requester's ``kernel.name``
     (the underlying TP/CP/LCD results are shared).
     """
+    preds = normalize_predictors(predictors)
     out: List[Analysis] = []
     for kernel in kernels:
         if not use_cache:
-            out.append(analyze_kernel(kernel, model, unroll=unroll))
+            out.append(analyze_kernel(kernel, model, unroll=unroll,
+                                      predictors=preds))
             continue
-        key = _cache_key(kernel, model, unroll)
+        key = _cache_key(kernel, model, unroll, preds)
         hit = _cache.get(key)
         if hit is not None:
             out.append(analysis_view(hit, kernel.name))
             continue
-        analysis = analyze_kernel(kernel, model, unroll=unroll)
+        analysis = analyze_kernel(kernel, model, unroll=unroll,
+                                  predictors=preds)
         _cache.put(key, analysis)
         out.append(analysis)
     return out

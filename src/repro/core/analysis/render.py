@@ -80,6 +80,15 @@ def _text_asm(report) -> str:
     lines.append(f"LCD (expected)  : {report.lcd_per_it:6.2f} cy/it   "
                  f"{len(report.lcd_chains)} cyclic chain(s) found")
     lines.append(f"CP  (upper bound): {report.cp_per_it:6.2f} cy/it")
+    if report.sim_block is not None:
+        conv = (f"steady after {report.sim_copies} copies"
+                if report.sim_converged
+                else f"unconverged at {report.sim_copies} copies")
+        clamp = (f", clamped to {report.sim_clamped.upper()}"
+                 if report.sim_clamped else "")
+        limiter = f", {report.sim_limiter}-limited" if report.sim_limiter else ""
+        lines.append(f"sim (window OoO) : {report.sim_per_it:6.2f} cy/it   "
+                     f"point prediction ({conv}{limiter}{clamp})")
     if report.degraded:
         stages = ",".join(report.stages_completed) or "(parse only)"
         lines.append("")
@@ -163,6 +172,14 @@ def render_markdown(report) -> str:
                  f"{len(report.lcd_chains)} cyclic chain(s)")
     lines.append(f"- **CP** (upper bound): "
                  f"{bracket['upper_bound_cp'] * scale:.2f} {unit}/it")
+    if report.sim_block is not None:
+        detail = ("converged" if report.sim_converged else "unconverged") + \
+            (f", {report.sim_limiter}-limited" if report.sim_limiter else "") + \
+            (f", clamped to {report.sim_clamped.upper()}"
+             if report.sim_clamped else "")
+        lines.append(f"- **sim** (point prediction): "
+                     f"{report.sim_per_it * scale:.2f} {unit}/it — "
+                     f"window-limited OoO simulation ({detail})")
     if report.degraded:
         stages = ", ".join(report.stages_completed) or "parse only"
         lines.append(f"- **DEGRADED** — rung `{report.degradation}`; "

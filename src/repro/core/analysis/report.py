@@ -29,10 +29,21 @@ from typing import Dict, Optional, Tuple
 #: ``degradation``, ``stages_completed`` — the serving path's degradation
 #: ladder marks partial answers (``tp_only`` / ``parse_only`` rungs) so a
 #: caller can always tell a degraded report from a full one.
-SCHEMA_VERSION = 2
+#:
+#: v3 adds the window-limited OoO simulator's point prediction:
+#: ``sim_block`` (clamped into the [TP, CP] bracket; ``None`` when the
+#: simulator did not run), ``sim_raw_block`` (unclamped steady state),
+#: ``sim_converged`` / ``sim_copies`` / ``sim_clamped`` / ``sim_limiter``,
+#: and ``sim_window`` (the per-arch window parameters used).  v1/v2
+#: payloads load with ``sim_block=None``.
+SCHEMA_VERSION = 3
 
 #: All pipeline stages, the ``stages_completed`` value of a full report.
-FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd")
+FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd", "sim")
+
+#: What a full report completed before the simulator existed (schema <= 2);
+#: the ``stages_completed`` default for payloads that predate the field.
+_LEGACY_FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd")
 
 #: Bracket keys shared by both kinds — the paper's [TP, CP] runtime bracket
 #: with the LCD as the expected value.
@@ -88,8 +99,18 @@ class AnalysisReport:
     # Degradation ladder (schema v2, additive): a degraded report carries
     # only the numbers its rung computed; the rest are 0.0.
     degraded: bool = False
-    degradation: str = "full"  # "full" | "tp_only" | "parse_only"
+    degradation: str = "full"  # "full" | "bracket" | "tp_only" | "parse_only"
     stages_completed: Tuple[str, ...] = FULL_STAGES
+    # Window-limited OoO simulator point prediction (schema v3).  Unlike the
+    # bounds, absence is meaningful (not requested / no window model / a
+    # bracket-rung answer), so the headline value is Optional rather than 0.0.
+    sim_block: Optional[float] = None
+    sim_raw_block: Optional[float] = None  # unclamped steady-state measure
+    sim_converged: bool = False
+    sim_copies: int = 0
+    sim_clamped: str = ""  # "" | "tp" | "cp"
+    sim_limiter: str = ""  # dominant binding constraint at steady state
+    sim_window: Dict[str, int] = field(default_factory=dict)
     schema_version: int = SCHEMA_VERSION
 
     # -- derived -----------------------------------------------------------
@@ -109,6 +130,12 @@ class AnalysisReport:
     @property
     def tp_balanced_per_it(self) -> float:
         return self.tp_balanced_block / self.unroll
+
+    @property
+    def sim_per_it(self) -> Optional[float]:
+        if self.sim_block is None:
+            return None
+        return self.sim_block / self.unroll
 
     def prediction_bracket(self) -> Dict[str, float]:
         """[TP, CP] runtime bracket with the LCD as the expected value."""
@@ -143,6 +170,13 @@ class AnalysisReport:
             "degraded": self.degraded,
             "degradation": self.degradation,
             "stages_completed": list(self.stages_completed),
+            "sim_block": self.sim_block,
+            "sim_raw_block": self.sim_raw_block,
+            "sim_converged": self.sim_converged,
+            "sim_copies": self.sim_copies,
+            "sim_clamped": self.sim_clamped,
+            "sim_limiter": self.sim_limiter,
+            "sim_window": dict(self.sim_window),
             "prediction_bracket": self.prediction_bracket(),
             "rows": [asdict(r) for r in self.rows],
             "lcd_chains": [
@@ -191,7 +225,17 @@ class AnalysisReport:
             # ladder are, by construction, full reports.
             degraded=data.get("degraded", False),
             degradation=data.get("degradation", "full"),
-            stages_completed=tuple(data.get("stages_completed", FULL_STAGES)),
+            stages_completed=tuple(data.get("stages_completed",
+                                            _LEGACY_FULL_STAGES)),
+            # v3 simulator fields: pre-simulator payloads have no point
+            # prediction, which None (not 0.0) states faithfully.
+            sim_block=data.get("sim_block"),
+            sim_raw_block=data.get("sim_raw_block"),
+            sim_converged=data.get("sim_converged", False),
+            sim_copies=data.get("sim_copies", 0),
+            sim_clamped=data.get("sim_clamped", ""),
+            sim_limiter=data.get("sim_limiter", ""),
+            sim_window=dict(data.get("sim_window", {})),
             schema_version=version,
         )
 
@@ -250,6 +294,7 @@ class AnalysisReport:
                         carried_by=c.carried_by)
             for c in lcd.chains) if lcd is not None else ()
         model = analysis.model
+        sim = getattr(analysis, "sim", None)
         return cls(
             kind="asm",
             kernel_name=analysis.kernel.name,
@@ -276,6 +321,14 @@ class AnalysisReport:
             degraded=analysis.degraded,
             degradation=analysis.degradation,
             stages_completed=tuple(analysis.stages_completed),
+            sim_block=sim.cy_per_block if sim is not None else None,
+            sim_raw_block=sim.raw_cy_per_block if sim is not None else None,
+            sim_converged=sim.converged if sim is not None else False,
+            sim_copies=sim.copies if sim is not None else 0,
+            sim_clamped=sim.clamped_to if sim is not None else "",
+            sim_limiter=sim.limiter if sim is not None else "",
+            sim_window=(sim.window.to_dict()
+                        if sim is not None and sim.window is not None else {}),
         )
 
     @classmethod
@@ -342,4 +395,7 @@ class AnalysisReport:
             tp_balanced_block=terms.get(bottleneck, 0.0),
             balanced_port_load=dict(terms),
             balanced_bottleneck=bottleneck,
+            # The OoO simulator is an asm-pipeline concept; HLO reports
+            # complete the legacy stage set and carry no point prediction.
+            stages_completed=_LEGACY_FULL_STAGES,
         )

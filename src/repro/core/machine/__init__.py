@@ -1,11 +1,12 @@
 from repro.core.machine.model import (DBEntry, MachineModel, pressure_uops,
                                       uniform, uops_entry)
+from repro.core.machine.window import WindowParams
 from repro.core.machine.csx import cascade_lake
 from repro.core.machine.n1 import neoverse_n1
 from repro.core.machine.tx2 import thunderx2
 from repro.core.machine.zen import zen
 from repro.core.machine.zen2 import zen2
 
-__all__ = ["DBEntry", "MachineModel", "pressure_uops", "uniform",
-           "uops_entry", "cascade_lake", "neoverse_n1", "thunderx2", "zen",
-           "zen2"]
+__all__ = ["DBEntry", "MachineModel", "WindowParams", "pressure_uops",
+           "uniform", "uops_entry", "cascade_lake", "neoverse_n1",
+           "thunderx2", "zen", "zen2"]

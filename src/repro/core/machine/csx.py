@@ -19,6 +19,7 @@ Sources: uops.info SKX tables; Intel SOM; OSACA DB.
 from __future__ import annotations
 
 from repro.core.machine.model import MachineModel, uops_entry
+from repro.core.machine.window import WindowParams
 
 _FP2 = [(1.0, ("P0", "P1"))]
 _ALU4 = [(1.0, ("P0", "P1", "P5", "P6"))]
@@ -81,4 +82,8 @@ def cascade_lake() -> MachineModel:
         macro_fusion=True,
         fused_branch_pressure={"P6": 1.0},
         frequency_ghz=2.5,
+        # Skylake-SP class window (Intel SOG): 4-wide rename/retire,
+        # 224-entry ROB, 97-entry unified RS, 56-entry store queue.
+        window=WindowParams(issue_width=4, rob_size=224, sched_size=97,
+                            lsq_size=56, retire_width=4).validate(),
     )

@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Mapping, Optional, Tuple
 
 from repro.core.isa.instruction import InstructionForm
+from repro.core.machine.window import WindowParams
 
 # Unknown (model name, mnemonic:signature) pairs already warned about, so a
 # missing entry is reported once per process instead of per occurrence.
@@ -143,6 +144,10 @@ class MachineModel:
         default_factory=lambda: DBEntry(latency=1.0, pressure={}, note="default")
     )
     frequency_ghz: float = 2.5
+    # Out-of-order window capacities for the point-prediction simulator
+    # (repro.core.sim).  ``None`` means "no window model": the simulator is
+    # skipped for this machine and analyses fall back to the [TP, CP] bracket.
+    window: Optional[WindowParams] = None
     # Memoized lookup results keyed by (mnemonic, signature, has_loads,
     # has_stores): repeated instruction forms (every copy of every unrolled
     # instance) resolve to the same (entry, load, store) parts, so probing

@@ -12,6 +12,7 @@ Entries carry µ-ops with *eligible port sets* (``uops_entry``); the derived
 from __future__ import annotations
 
 from repro.core.machine.model import MachineModel, uops_entry
+from repro.core.machine.window import WindowParams
 
 _FP2 = [(1.0, ("V0", "V1"))]
 _ALU3 = [(1.0, ("I0", "I1", "I2"))]
@@ -59,4 +60,8 @@ def neoverse_n1() -> MachineModel:
         store_entry=uops_entry(4.0, _ST, note="split store µ-op"),
         macro_fusion=False,
         frequency_ghz=2.5,
+        # Neoverse N1 SOG: 4-wide front end, 8-wide retire, 128-entry ROB,
+        # distributed issue queues totalling ~64, 46-entry load queue side.
+        window=WindowParams(issue_width=4, rob_size=128, sched_size=64,
+                            lsq_size=46, retire_width=8).validate(),
     )

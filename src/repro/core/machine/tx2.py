@@ -17,6 +17,7 @@ are saturated by FP.
 from __future__ import annotations
 
 from repro.core.machine.model import MachineModel, uops_entry
+from repro.core.machine.window import WindowParams
 
 _FP2 = [(1.0, ("P0", "P1"))]
 _ALU3 = [(1.0, ("P0", "P1", "P2"))]
@@ -71,4 +72,8 @@ def thunderx2() -> MachineModel:
         store_entry=uops_entry(4.0, _ST, note="split store µ-op"),
         macro_fusion=False,
         frequency_ghz=2.2,
+        # Vulcan-class window: 4-wide dispatch/retire, 180-entry ROB,
+        # 60 scheduler entries across the issue queues, 36-entry LSQ side.
+        window=WindowParams(issue_width=4, rob_size=180, sched_size=60,
+                            lsq_size=36, retire_width=4).validate(),
     )

@@ -14,6 +14,7 @@ scheduler assigns loads/stores across the shared AGU pair optimally.
 from __future__ import annotations
 
 from repro.core.machine.model import MachineModel, uops_entry
+from repro.core.machine.window import WindowParams
 
 _FADD = [(1.0, ("FP2", "FP3"))]
 _FMUL = [(1.0, ("FP0", "FP1"))]
@@ -68,4 +69,8 @@ def zen() -> MachineModel:
         macro_fusion=True,
         fused_branch_pressure={"B": 1.0},
         frequency_ghz=2.3,
+        # Zen 1 (AMD SOG 55723): 6-wide dispatch, 8-wide retire, 192-entry
+        # retire queue, ~84 scheduler entries (ALU+AGU+FP), 44-entry SQ.
+        window=WindowParams(issue_width=6, rob_size=192, sched_size=84,
+                            lsq_size=44, retire_width=8).validate(),
     )

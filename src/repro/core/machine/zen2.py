@@ -11,6 +11,7 @@ Entries carry µ-ops with *eligible port sets* (``uops_entry``); the derived
 from __future__ import annotations
 
 from repro.core.machine.model import MachineModel, uops_entry
+from repro.core.machine.window import WindowParams
 
 _FADD = [(1.0, ("FP2", "FP3"))]
 _FMUL = [(1.0, ("FP0", "FP1"))]
@@ -65,4 +66,8 @@ def zen2() -> MachineModel:
         macro_fusion=True,
         fused_branch_pressure={"B": 1.0},
         frequency_ghz=3.4,
+        # Zen 2: 6-wide dispatch, 8-wide retire, 224-entry ROB, ~92
+        # scheduler entries, 48-entry store queue.
+        window=WindowParams(issue_width=6, rob_size=224, sched_size=92,
+                            lsq_size=48, retire_width=8).validate(),
     )

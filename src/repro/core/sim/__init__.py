@@ -1,0 +1,24 @@
+"""Window-limited out-of-order point-prediction simulator.
+
+Closes the paper's ``[TP, CP]`` bracket with a steady-state cycles-per-
+iteration prediction; see :mod:`repro.core.sim.engine` for the model and
+:class:`repro.core.machine.window.WindowParams` for the per-arch window
+capacities it consumes.
+"""
+
+from repro.core.machine.window import WindowParams
+from repro.core.sim.engine import (KernelTemplate, SimResult,
+                                   simulate_from_dag, simulate_kernel,
+                                   simulate_kernels, simulate_template,
+                                   template_from_dag)
+
+__all__ = [
+    "KernelTemplate",
+    "SimResult",
+    "WindowParams",
+    "simulate_from_dag",
+    "simulate_kernel",
+    "simulate_kernels",
+    "simulate_template",
+    "template_from_dag",
+]

@@ -26,16 +26,23 @@ import numpy as np
 from repro.configs import RunConfig, get_config, list_archs, tiny_variant
 
 
+def _predictors(args) -> tuple:
+    if not args.predictors:
+        return ()
+    return tuple(p.strip() for p in args.predictors.split(",") if p.strip())
+
+
 def _analysis_pool(args):
     from repro.core.registry import get_arch
     from repro.serving.analysis import AnalysisRequest
 
+    preds = _predictors(args)
     if args.kernel_file:
         with open(args.kernel_file) as f:
             asm = f.read()
         arch = get_arch(args.arch or "tx2").id
         return [AnalysisRequest(asm=asm, arch=arch, unroll=args.unroll,
-                                name=args.kernel_file)]
+                                name=args.kernel_file, predictors=preds)]
     if args.arch:
         spec = get_arch(args.arch)
         if spec.sample_asm is None:
@@ -43,7 +50,8 @@ def _analysis_pool(args):
                              f"pass --kernel-file")
         return [
             AnalysisRequest(asm=spec.sample_asm, arch=spec.id, unroll=u,
-                            name=f"{spec.id}-gauss-seidel/{u}x")
+                            name=f"{spec.id}-gauss-seidel/{u}x",
+                            predictors=preds)
             for u in (1, args.unroll)
         ]
     # Default synthetic traffic: a stream of requests drawn from a few hot
@@ -51,11 +59,11 @@ def _analysis_pool(args):
     tx2, csx = get_arch("tx2"), get_arch("csx")
     return [
         AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=args.unroll,
-                        name="gs-tx2"),
+                        name="gs-tx2", predictors=preds),
         AnalysisRequest(asm=csx.sample_asm, arch="csx", unroll=args.unroll,
-                        name="gs-csx"),
+                        name="gs-csx", predictors=preds),
         AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=1,
-                        name="gs-tx2-1x"),
+                        name="gs-tx2-1x", predictors=preds),
     ]
 
 
@@ -78,6 +86,7 @@ def _analysis_service(args):
             "stage:dag": args.fault_rate,
             "stage:cp": args.fault_rate,
             "stage:lcd": args.fault_rate,
+            "stage:sim": args.fault_rate,
         })
     return AnalysisService(resilience=resilience, faults=faults)
 
@@ -131,8 +140,11 @@ def main() -> None:
                     help="admission bound; excess load is shed with "
                          "OVERLOADED + retry_after (0 = unbounded)")
     ap.add_argument("--min-rung", default="parse_only",
-                    choices=("full", "tp_only", "parse_only"),
+                    choices=("full", "bracket", "tp_only", "parse_only"),
                     help="cheapest degradation rung allowed")
+    ap.add_argument("--predictors", default="",
+                    help="comma-separated predictor subset "
+                         "(tp,cp,lcd,sim; empty = all)")
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="deterministic injected fault rate per stage site")
     ap.add_argument("--fault-seed", type=int, default=0)

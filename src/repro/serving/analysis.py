@@ -28,8 +28,8 @@ request path becomes resilient:
 * **retry with exponential backoff + deterministic jitter** for faults
   classified as transient;
 * the **degradation ladder** — when retries are exhausted the job falls to
-  a cheaper rung (full → tp_only → parse_only) so one pathological kernel
-  yields a partial answer, not a stalled wave.  Degraded responses are
+  a cheaper rung (full → bracket → tp_only → parse_only) so one
+  pathological kernel yields a partial answer, not a stalled wave.  Degraded responses are
   marked (``degraded``, ``stages_completed``, code ``DEGRADED``) and are
   **never cached as full results**.
 
@@ -49,7 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.analysis import (Analysis, AnalysisReport, DEGRADATION_LADDER,
                                  analysis_view, analyze_kernel_rung,
-                                 analyze_kernels)
+                                 analyze_kernels, normalize_predictors)
 from repro.core.analysis.analyze import LRUCache
 from repro.core.isa import parse_aarch64, parse_x86
 from repro.core.machine import MachineModel
@@ -80,6 +80,8 @@ class AnalysisRequest:
     registry.  ``arch`` accepts any registry id or alias.  ``timeout_s``
     overrides the service's per-request deadline (0 = use the service
     default; ignored when the service has no resilience config).
+    ``predictors`` (additive, v2) selects a subset of
+    ``("tp", "cp", "lcd", "sim")``; empty means all.
     """
 
     asm: str
@@ -88,25 +90,36 @@ class AnalysisRequest:
     unroll: int = 1
     name: str = "kernel"
     timeout_s: float = 0.0
+    predictors: Tuple[str, ...] = ()
     version: int = API_VERSION
 
+    def normalized_predictors(self) -> Tuple[str, ...]:
+        """Canonical predictor subset (validated; empty = all)."""
+        return normalize_predictors(tuple(self.predictors) or None)
+
     @property
-    def key(self) -> Tuple[str, str, str, int]:
+    def key(self) -> tuple:
         """Canonical cache identity: registry-resolved arch id + isa, so
-        aliases (``cascadelake`` vs ``csx``) share one entry.  Falls back to
-        the raw fields when the arch is unknown (the request then errors at
+        aliases (``cascadelake`` vs ``csx``) share one entry, plus the
+        normalized predictor subset.  Falls back to the raw fields when the
+        arch (or predictor set) is unknown (the request then errors at
         analysis time anyway).  ``timeout_s`` is deliberately excluded: it
         shapes how long we try, not what the answer is."""
         try:
+            preds = self.normalized_predictors()
+        except ValueError:
+            preds = tuple(self.predictors)
+        try:
             spec = get_arch(self.arch)
         except ValueError:
-            return (self.arch, self.isa, self.asm, self.unroll)
-        return (spec.id, self.isa or spec.isa, self.asm, self.unroll)
+            return (self.arch, self.isa, self.asm, self.unroll, preds)
+        return (spec.id, self.isa or spec.isa, self.asm, self.unroll, preds)
 
     def to_dict(self) -> Dict:
         return {"version": self.version, "asm": self.asm, "arch": self.arch,
                 "isa": self.isa, "unroll": self.unroll, "name": self.name,
-                "timeout_s": self.timeout_s}
+                "timeout_s": self.timeout_s,
+                "predictors": list(self.predictors)}
 
     @classmethod
     def from_dict(cls, data: Dict) -> "AnalysisRequest":
@@ -114,6 +127,7 @@ class AnalysisRequest:
                    isa=data.get("isa", ""), unroll=data.get("unroll", 1),
                    name=data.get("name", "kernel"),
                    timeout_s=data.get("timeout_s", 0.0),
+                   predictors=tuple(data.get("predictors", ())),
                    version=data.get("version", API_VERSION))
 
 
@@ -349,16 +363,17 @@ class AnalysisService:
             raise ValueError(f"unknown isa '{isa}'")
         if req.unroll < 1:
             raise ValueError(f"unroll must be >= 1, got {req.unroll}")
+        preds = req.normalized_predictors()  # ValueError on unknown names
         # Same shape as AnalysisRequest.key, built from the spec already in
         # hand (the property would resolve the registry a second time).
-        return spec, parser, (spec.id, isa, req.asm, req.unroll)
+        return spec, parser, (spec.id, isa, req.asm, req.unroll, preds)
 
     def _analyze_batch(
         self, requests: Sequence[AnalysisRequest]
     ) -> List[Union[Analysis, Exception]]:
         out: List[Optional[Union[Analysis, Exception]]] = [None] * len(requests)
         # One job per distinct uncached kernel in the wave.
-        jobs: List[Tuple[List[int], object, tuple, str, int]] = []
+        jobs: List[Tuple[List[int], object, tuple, str, int, tuple]] = []
         pending: Dict[tuple, List[int]] = {}
         for pos, req in enumerate(requests):
             try:
@@ -387,12 +402,14 @@ class AnalysisService:
                 self._cache.put(key, out[pos])
                 continue
             pending[key] = [pos]
-            jobs.append((pending[key], kernel, key, spec.id, req.unroll))
+            jobs.append((pending[key], kernel, key, spec.id, req.unroll,
+                         key[-1]))
 
-        for positions, kernel, key, arch_id, unroll in jobs:
+        for positions, kernel, key, arch_id, unroll, preds in jobs:
             model = self.model_for(arch_id)  # memoized per service
             try:
-                analysis = analyze_kernels([kernel], model, unroll=unroll)[0]
+                analysis = analyze_kernels([kernel], model, unroll=unroll,
+                                           predictors=preds)[0]
             except Exception as exc:
                 exc = exc.with_traceback(None)
                 for pos in positions:
@@ -413,7 +430,7 @@ class AnalysisService:
         points, and per-job deadlines/retries/degradation."""
         cfg = self.resilience or ResilienceConfig()
         out: List[Optional[_Outcome]] = [None] * len(requests)
-        jobs: List[Tuple[List[int], object, tuple, str, int, float]] = []
+        jobs: List[Tuple[List[int], object, tuple, str, int, float, tuple]] = []
         pending: Dict[tuple, List[int]] = {}
         for pos, req in enumerate(requests):
             try:
@@ -458,11 +475,12 @@ class AnalysisService:
             pending[key] = [pos]
             timeout_s = req.timeout_s or cfg.request_timeout_s
             jobs.append((pending[key], kernel, key, spec.id, req.unroll,
-                         timeout_s))
+                         timeout_s, key[-1]))
 
-        for positions, kernel, key, arch_id, unroll, timeout_s in jobs:
+        for positions, kernel, key, arch_id, unroll, timeout_s, preds in jobs:
             model = self.model_for(arch_id)
-            outcome = self._run_job(kernel, model, unroll, timeout_s, cfg)
+            outcome = self._run_job(kernel, model, unroll, timeout_s, cfg,
+                                    preds)
             breaker = self.breaker_for(arch_id)
             analysis = outcome.analysis
             if analysis is not None and not analysis.degraded:
@@ -498,7 +516,8 @@ class AnalysisService:
         return out  # type: ignore[return-value]
 
     def _run_job(self, kernel, model, unroll: int, timeout_s: float,
-                 cfg: ResilienceConfig) -> _Outcome:
+                 cfg: ResilienceConfig,
+                 predictors: Optional[tuple] = None) -> _Outcome:
         """One kernel through deadline + retry + degradation ladder."""
         deadline = (Deadline.after(timeout_s, cfg.clock)
                     if timeout_s > 0 else None)
@@ -517,7 +536,8 @@ class AnalysisService:
                 attempts += 1
                 try:
                     analysis = self._run_rung(kernel, model, unroll, rung,
-                                              checkpoint, deadline, cfg)
+                                              checkpoint, deadline, cfg,
+                                              predictors)
                     return _Outcome(analysis=analysis, attempts=attempts)
                 except Exception as exc:  # noqa: BLE001 — classified below
                     last_exc = exc
@@ -533,10 +553,12 @@ class AnalysisService:
         return _Outcome(error=last_exc, attempts=attempts)
 
     def _run_rung(self, kernel, model, unroll: int, rung: str, checkpoint,
-                  deadline: Optional[Deadline], cfg: ResilienceConfig):
+                  deadline: Optional[Deadline], cfg: ResilienceConfig,
+                  predictors: Optional[tuple] = None):
         def run():
             return analyze_kernel_rung(kernel, model, unroll, rung=rung,
-                                       checkpoint=checkpoint)
+                                       checkpoint=checkpoint,
+                                       predictors=predictors)
 
         # The cancellable worker bounds wall time even when a stage blocks
         # between checkpoints; with a virtual clock (chaos tests) wall time

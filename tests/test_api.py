@@ -277,7 +277,13 @@ def test_request_key_canonical_across_aliases():
     b = AnalysisRequest(asm="fadd d0, d0, d1", arch="cascadelake", isa="x86")
     assert a.key == b.key
     unknown = AnalysisRequest(asm="x", arch="not-a-machine")
-    assert unknown.key == ("not-a-machine", "", "x", 1)
+    assert unknown.key == ("not-a-machine", "", "x", 1,
+                           ("tp", "cp", "lcd", "sim"))
+    # predictors are part of the identity: a sim-less request must not
+    # collide with (or be served from) a full analysis.
+    subset = AnalysisRequest(asm="fadd d0, d0, d1", arch="csx",
+                             predictors=("tp", "cp", "lcd"))
+    assert subset.key != a.key
 
 
 def test_service_legacy_analyze_batch_still_raises():

@@ -25,7 +25,7 @@ from repro.serving.resilience import (AdmissionController, CircuitBreaker,
                                       classify_exception, is_transient,
                                       run_with_deadline)
 
-FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd")
+FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd", "sim")
 
 
 def resilient_config(clock, **kw):
@@ -280,12 +280,13 @@ def test_service_degrades_to_tp_only_on_persistent_cp_fault():
     assert resp.stages_completed == ("resolve", "tp")
     assert resp.report.degraded and resp.report.degradation == "tp_only"
     assert resp.report.tp_block > 0  # the optimistic bound still answers
-    # 3 attempts at full (all fault at cp) + 1 at tp_only (no cp stage).
-    assert resp.attempts == 4
-    assert service.counters["retries"] == 2
+    # 3 attempts at full + 3 at bracket (both rungs run cp, all fault
+    # there) + 1 at tp_only (no cp stage).
+    assert resp.attempts == 7
+    assert service.counters["retries"] == 4
     assert service.counters["degraded"] == 1
-    assert service.counters["faults_injected"] == 3
-    assert len(clock.sleeps) == 2  # backoffs were simulated, not slept
+    assert service.counters["faults_injected"] == 6
+    assert len(clock.sleeps) == 4  # backoffs were simulated, not slept
 
 
 def test_service_degrades_to_parse_only_on_deadline_blowout():
@@ -304,9 +305,9 @@ def test_service_degrades_to_parse_only_on_deadline_blowout():
     assert resp.stages_completed == ()
     assert resp.report.rows  # parse-level rows still present
     assert resp.report.tp_block == 0.0  # no numbers were computed
-    # full rung timed out; tp_only's first checkpoint saw the dead deadline;
-    # parse_only answered without checkpoints.
-    assert resp.attempts == 3
+    # full timed out; bracket's and tp_only's first checkpoints saw the
+    # dead deadline; parse_only answered without checkpoints.
+    assert resp.attempts == 4
 
 
 def test_service_min_rung_full_errors_instead_of_degrading():
@@ -329,14 +330,15 @@ def test_service_stage_budget_triggers_degradation():
     service = AnalysisService(
         resilience=resilient_config(clock, stage_timeout_s=0.1,
                                     request_timeout_s=100.0),
-        faults=FaultInjector(seed=0, scripts={"timeout:dag": {1, 2, 3}},
+        faults=FaultInjector(seed=0,
+                             scripts={"timeout:dag": set(range(1, 7))},
                              clock=clock, advance_s=0.2))
     resp = service.submit(
         AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", name="gs"))
     assert resp.ok and resp.degraded
     assert resp.report.degradation == "tp_only"  # tp_only has no dag stage
-    assert service.counters["retries"] == 2
-    assert clock.sleeps and len(clock.sleeps) == 2
+    assert service.counters["retries"] == 4
+    assert clock.sleeps and len(clock.sleeps) == 4
 
 
 # ---------------------------------------------------------------------------

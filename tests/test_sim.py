@@ -1,0 +1,355 @@
+"""Window-limited OoO simulator: the bracket invariant TP(balanced) <= sim
+<= CP on the example kernels and randomized kernels across all five machine
+models, window-parameter schema bounds, window mechanics (capacity actually
+binds), schema v3 round-trips, and end-to-end wiring through the facade and
+the serving path."""
+
+import random
+
+import pytest
+
+from repro.core import (analyze_kernel, cascade_lake, parse_aarch64,
+                        parse_x86, thunderx2, zen)
+from repro.core.analysis import (AnalysisReport, analyze_kernel_bracket,
+                                 normalize_predictors)
+from repro.core.machine import WindowParams, neoverse_n1, zen2
+from repro.core.registry import asm_arch_ids, get_arch
+from repro.core.sim import simulate_kernel
+from repro.core.validation import GS_CLX_ASM, GS_TX2_ASM, GS_ZEN_ASM
+
+EXAMPLE_KERNELS = [
+    ("tx2", GS_TX2_ASM, parse_aarch64, thunderx2),
+    ("n1", GS_TX2_ASM, parse_aarch64, neoverse_n1),
+    ("csx", GS_CLX_ASM, parse_x86, cascade_lake),
+    ("zen", GS_ZEN_ASM, parse_x86, zen),
+    ("zen2", GS_ZEN_ASM, parse_x86, zen2),
+]
+
+TOL = 1e-9
+
+
+# -- window parameter schema (every asm arch ships a plausible window) --------
+
+
+def test_every_asm_arch_defines_window_params():
+    for arch_id in asm_arch_ids():
+        model = get_arch(arch_id).model_factory()
+        w = model.window
+        assert w is not None, f"{arch_id} has no window parameters"
+        for field in ("issue_width", "rob_size", "sched_size", "lsq_size",
+                      "retire_width"):
+            value = getattr(w, field)
+            assert isinstance(value, int) and value > 0, \
+                f"{arch_id}.{field} = {value!r}"
+        assert w.issue_width <= w.retire_width <= w.rob_size, arch_id
+        assert w.lsq_size <= w.sched_size <= w.rob_size, arch_id
+
+
+@pytest.mark.parametrize("kw", [
+    dict(issue_width=0),
+    dict(rob_size=-1),
+    dict(retire_width=2),       # retire < issue
+    dict(rob_size=3),           # rob < retire
+    dict(sched_size=200),       # sched > rob
+    dict(lsq_size=80),          # lsq > sched
+    dict(issue_width=2.0),      # non-integer
+])
+def test_window_params_validate_rejects_bad_bounds(kw):
+    base = dict(issue_width=4, rob_size=128, sched_size=60, lsq_size=40,
+                retire_width=4)
+    base.update(kw)
+    with pytest.raises((ValueError, TypeError)):
+        WindowParams(**base).validate()
+
+
+# -- the bracket invariant on the example kernels -----------------------------
+
+
+@pytest.mark.parametrize("arch,asm,parse,mk", EXAMPLE_KERNELS)
+@pytest.mark.parametrize("unroll", [1, 4])
+def test_sim_inside_bracket_on_example_kernels(arch, asm, parse, mk, unroll):
+    analysis = analyze_kernel(parse(asm, name="gs"), mk(), unroll=unroll)
+    sim = analysis.sim
+    assert sim is not None and sim.converged
+    lo = analysis.tp.balanced_throughput
+    hi = max(analysis.cp.length, lo)
+    assert lo - TOL <= sim.cy_per_block <= hi + TOL
+    # On the Gauss-Seidel kernels the window prediction is *strictly* inside
+    # the bracket (no clamping needed): the simulator genuinely closes it.
+    assert sim.clamped_to == ""
+    assert lo < sim.raw_cy_per_block < hi
+    assert sim.cy_per_block == sim.raw_cy_per_block
+
+
+@pytest.mark.parametrize("arch,sim_per_it,limiter", [
+    ("tx2", 18.0, "ports"),
+    ("n1", 7.5, "dependencies"),
+    ("csx", 14.0, "dependencies"),
+    ("zen", 11.5, "dependencies"),
+    ("zen2", 10.5, "dependencies"),
+])
+def test_sim_point_predictions_on_gauss_seidel(arch, sim_per_it, limiter):
+    """Pinned steady-state predictions (4x unroll): regressions in dispatch,
+    port arbitration, or retirement shift these immediately."""
+    asm, parse, mk = {a: (s, p, m) for a, s, p, m in EXAMPLE_KERNELS}[arch]
+    analysis = analyze_kernel(parse(asm, name="gs"), mk(), unroll=4)
+    assert analysis.sim_per_it == pytest.approx(sim_per_it, abs=1e-9)
+    assert analysis.sim.limiter == limiter
+    assert analysis.sim.copies == 4  # steady already at the warmup exit
+
+
+# -- randomized kernels x five arches -----------------------------------------
+
+AARCH64_OPS = ["fadd d{a}, d{b}, d{c}", "fmul d{a}, d{b}, d{c}",
+               "fdiv d{a}, d{b}, d{c}", "add x{a}, x{b}, 8",
+               "ldr d{a}, [x{b}, 8]", "str d{a}, [x{b}], 8",
+               "cmp x{a}, x{b}"]
+X86_OPS = ["vaddsd %xmm{a}, %xmm{b}, %xmm{c}",
+           "vmulsd %xmm{a}, %xmm{b}, %xmm{c}",
+           "movsd 8(%rax,%rbx,8), %xmm{a}",
+           "movsd %xmm{a}, 8(%rax,%rbx,8)",
+           "addq $8, %rax", "cmpq %rbx, %rax"]
+
+
+def _random_kernel(rng, isa):
+    ops, parse = ((AARCH64_OPS, parse_aarch64) if isa == "aarch64"
+                  else (X86_OPS, parse_x86))
+    lines = [rng.choice(ops).format(a=rng.randint(0, 7), b=rng.randint(0, 7),
+                                    c=rng.randint(0, 7))
+             for _ in range(rng.randint(1, 14))]
+    return parse("# OSACA-BEGIN\n" + "\n".join(lines) + "\n# OSACA-END",
+                 name="rand")
+
+
+ARCH_SEED = {"tx2": 100, "n1": 200, "csx": 300, "zen": 400, "zen2": 500}
+
+
+@pytest.mark.parametrize("arch,mk", [("tx2", thunderx2), ("n1", neoverse_n1),
+                                     ("csx", cascade_lake), ("zen", zen),
+                                     ("zen2", zen2)])
+@pytest.mark.parametrize("seed", range(8))
+def test_sim_bracket_property_randomized(arch, mk, seed):
+    """Property: for any kernel, the headline sim prediction lies inside
+    [TP(balanced), max(TP, CP)] and the raw measurement never undercuts it
+    by more than the clamp admits."""
+    model = mk()
+    rng = random.Random(seed * 31 + ARCH_SEED[arch])
+    analysis = analyze_kernel(_random_kernel(rng, model.isa), model)
+    sim = analysis.sim
+    assert sim is not None
+    lo = analysis.tp.balanced_throughput
+    hi = max(analysis.cp.length, lo)
+    assert lo - TOL <= sim.cy_per_block <= hi + TOL
+    assert sim.raw_cy_per_block > 0.0
+    # The clamp annotation is truthful.
+    if sim.clamped_to == "":
+        assert sim.cy_per_block == sim.raw_cy_per_block
+    elif sim.clamped_to == "tp":
+        assert sim.raw_cy_per_block < lo and sim.cy_per_block == lo
+    else:
+        assert sim.clamped_to == "cp"
+        assert sim.raw_cy_per_block > hi and sim.cy_per_block == hi
+    # Determinism: a second run reproduces the prediction bit-for-bit.
+    again = analyze_kernel(_random_kernel(
+        random.Random(seed * 31 + ARCH_SEED[arch]), model.isa), model)
+    assert again.sim.cy_per_block == sim.cy_per_block
+    assert again.sim.copies == sim.copies
+
+
+# -- window mechanics: the capacities actually bind ---------------------------
+
+
+def test_tiny_rob_throttles_independent_work():
+    """64 independent (pipelined) fmuls: a 4-entry ROB serializes what a
+    128-entry ROB overlaps, so the steady-state rate must degrade."""
+    model = thunderx2()
+    kernel = parse_aarch64(
+        "# OSACA-BEGIN\n" +
+        "\n".join(f"fmul d{i % 8}, d{8 + i % 8}, d{16 + i % 8}"
+                  for i in range(64)) + "\n# OSACA-END")
+    big = simulate_kernel(kernel, model, window=WindowParams(
+        issue_width=4, rob_size=128, sched_size=60, lsq_size=36,
+        retire_width=4))
+    small = simulate_kernel(kernel, model, window=WindowParams(
+        issue_width=1, rob_size=4, sched_size=2, lsq_size=2, retire_width=1))
+    assert small.raw_cy_per_block > big.raw_cy_per_block * 1.5
+    assert small.limiter in ("frontend", "rob", "scheduler")
+
+
+def test_serial_chain_sim_tracks_latency_not_throughput():
+    """A pure latency chain: the point prediction sits at the CP end of the
+    bracket, far above the port bound."""
+    model = thunderx2()
+    kernel = parse_aarch64(
+        "# OSACA-BEGIN\nfadd d0, d0, d1\nfadd d0, d0, d2\n"
+        "fadd d0, d0, d3\n# OSACA-END")
+    analysis = analyze_kernel(kernel, model)
+    sim = analysis.sim
+    assert sim.limiter == "dependencies"
+    # Three chained 6-cycle fadds per copy: 18 cy/block in steady state.
+    assert sim.cy_per_block == pytest.approx(analysis.cp.length, abs=TOL)
+    assert sim.cy_per_block > 2 * analysis.tp.balanced_throughput
+
+
+def test_simulate_kernel_requires_window_params():
+    from repro.core.machine import DBEntry, MachineModel
+    model = MachineModel(
+        name="nowin", isa="aarch64", ports=("P0",),
+        db={"fadd:fff": DBEntry(latency=2.0, pressure={"P0": 1.0})})
+    kernel = parse_aarch64("# OSACA-BEGIN\nfadd d0, d1, d2\n# OSACA-END")
+    with pytest.raises(ValueError, match="no window parameters"):
+        simulate_kernel(kernel, model)
+    # An explicit window= fills the gap for ad-hoc models.
+    result = simulate_kernel(kernel, model, window=WindowParams(
+        issue_width=2, rob_size=16, sched_size=8, lsq_size=4, retire_width=2))
+    assert result.cy_per_block > 0.0
+
+
+# -- predictor selection ------------------------------------------------------
+
+
+def test_normalize_predictors_implication_rules():
+    assert normalize_predictors(None) == ("tp", "cp", "lcd", "sim")
+    assert normalize_predictors(()) == ("tp", "cp", "lcd", "sim")
+    assert normalize_predictors(("cp",)) == ("tp", "cp")      # tp implied
+    assert normalize_predictors(("sim",)) == ("tp", "cp", "sim")  # sim => cp
+    assert normalize_predictors(["lcd", "tp"]) == ("tp", "lcd")
+    with pytest.raises(ValueError, match="unknown predictor"):
+        normalize_predictors(("tp", "vliw"))
+
+
+def test_analyze_kernel_predictor_subsets():
+    model = thunderx2()
+    kernel = parse_aarch64(GS_TX2_ASM, name="gs")
+    no_sim = analyze_kernel(kernel, model, unroll=4,
+                            predictors=("tp", "cp", "lcd"))
+    assert no_sim.sim is None and no_sim.cp is not None
+    assert no_sim.stages_completed == ("resolve", "tp", "dag", "cp", "lcd")
+    tp_only = analyze_kernel(kernel, model, predictors=("tp",))
+    assert tp_only.cp is None and tp_only.lcd is None and tp_only.sim is None
+    assert tp_only.stages_completed == ("resolve", "tp")
+    sim_only = analyze_kernel(kernel, model, unroll=4, predictors=("sim",))
+    assert sim_only.sim is not None and sim_only.cp is not None
+    assert sim_only.lcd is None
+    full = analyze_kernel(kernel, model, unroll=4)
+    assert sim_only.sim.cy_per_block == full.sim.cy_per_block
+
+
+def test_bracket_rung_skips_sim_only():
+    analysis = analyze_kernel_bracket(
+        parse_aarch64(GS_TX2_ASM, name="gs"), thunderx2(), 4)
+    assert analysis.sim is None
+    assert analysis.cp is not None and analysis.lcd is not None
+    assert analysis.degradation == "bracket"
+
+
+# -- report schema v3 ---------------------------------------------------------
+
+
+def test_report_v3_roundtrip_carries_sim_fields():
+    from repro.api import analyze
+
+    report = analyze(GS_TX2_ASM, arch="tx2", unroll=4, name="gs")
+    data = report.to_dict()
+    assert data["schema_version"] == 3
+    assert data["sim_block"] == pytest.approx(72.0)
+    assert data["sim_converged"] is True
+    assert data["sim_clamped"] == ""
+    assert data["sim_limiter"] == "ports"
+    assert data["sim_window"]["rob_size"] == 180
+    assert report.sim_per_it == pytest.approx(18.0)
+    restored = AnalysisReport.from_dict(data)
+    assert restored.to_dict() == data
+
+
+def test_report_v2_payload_loads_without_sim():
+    from repro.api import analyze
+
+    data = analyze(GS_TX2_ASM, arch="tx2", unroll=4).to_dict()
+    v2 = {k: v for k, v in data.items() if not k.startswith("sim_")}
+    v2["schema_version"] = 2
+    v2.pop("stages_completed", None)
+    legacy = AnalysisReport.from_dict(v2)
+    assert legacy.sim_block is None and legacy.sim_per_it is None
+    assert legacy.stages_completed == ("resolve", "tp", "dag", "cp", "lcd")
+    # Absence is meaningful, not zero: renderers must omit the sim line.
+    assert "sim (window OoO)" not in legacy.render("text")
+
+
+def test_report_rejects_future_schema():
+    from repro.api import analyze
+
+    data = analyze(GS_TX2_ASM, arch="tx2").to_dict()
+    data["schema_version"] = 4
+    with pytest.raises(ValueError, match="newer than supported"):
+        AnalysisReport.from_dict(data)
+
+
+def test_renderers_show_sim_line():
+    from repro.api import analyze
+
+    report = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    text = report.render("text")
+    assert "sim (window OoO)" in text and "point prediction" in text
+    assert "**sim**" in report.render("markdown")
+    no_sim = analyze(GS_TX2_ASM, arch="tx2", unroll=4,
+                     predictors=("tp", "cp", "lcd"))
+    assert "sim (window OoO)" not in no_sim.render("text")
+
+
+# -- facade + serving wiring --------------------------------------------------
+
+
+def test_api_analyze_predictors_reach_the_sim():
+    from repro.api import analyze
+
+    full = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    assert full.sim_block is not None
+    subset = analyze(GS_TX2_ASM, arch="tx2", unroll=4,
+                     predictors=("tp", "cp"))
+    assert subset.sim_block is None and subset.cp_block > 0
+    assert subset.lcd_block == 0.0
+    with pytest.raises(ValueError, match="asm targets only"):
+        analyze("HloModule m\n", arch="tpu-v5e", predictors=("tp",))
+
+
+def test_service_serves_sim_and_keys_cache_by_predictors():
+    from repro.serving.analysis import AnalysisRequest, AnalysisService
+
+    service = AnalysisService()
+    full = service.submit(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                          unroll=4, name="gs"))
+    assert full.ok and full.report.sim_block == pytest.approx(72.0)
+    assert full.stages_completed == ("resolve", "tp", "dag", "cp", "lcd",
+                                     "sim")
+    bracket = service.submit(AnalysisRequest(
+        asm=GS_TX2_ASM, arch="tx2", unroll=4, name="gs",
+        predictors=("tp", "cp", "lcd")))
+    assert bracket.ok and bracket.report.sim_block is None
+    # Distinct predictor sets are distinct cache entries, not collisions.
+    assert service.stats["hits"] == 0 and service.stats["misses"] == 2
+    again = service.submit(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                           unroll=4, name="gs"))
+    assert again.report.sim_block == pytest.approx(72.0)
+    assert service.stats["hits"] == 1
+
+
+def test_sim_fault_degrades_to_bracket_rung():
+    """A persistent sim-stage fault costs only the point prediction: the
+    service answers from the bracket rung with both bounds intact."""
+    from repro.serving.analysis import AnalysisRequest, AnalysisService
+    from repro.serving.faults import FaultInjector, VirtualClock
+    from repro.serving.resilience import ResilienceConfig
+
+    clock = VirtualClock()
+    service = AnalysisService(
+        resilience=ResilienceConfig(clock=clock, sleep=clock.sleep,
+                                    request_timeout_s=10.0),
+        faults=FaultInjector(seed=0, rates={"stage:sim": 1.0}))
+    resp = service.submit(AnalysisRequest(asm=GS_TX2_ASM, arch="tx2",
+                                          unroll=4, name="gs"))
+    assert resp.ok and resp.degraded
+    assert resp.report.degradation == "bracket"
+    assert resp.report.sim_block is None
+    assert resp.report.cp_block > 0 and resp.report.lcd_block > 0
+    assert resp.stages_completed == ("resolve", "tp", "dag", "cp", "lcd")

@@ -13,6 +13,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          the Gauss-Seidel kernels (all five machines) plus
                          wall-time scaling on 32/128/512-instr synthetics;
                          appends to the BENCH_analysis.json trajectory
+  diagnostics          — findings-pass overhead: diagnose=True vs plain
+                         analyze_kernel on the 512-instr synthetic kernel;
+                         appends to the BENCH_analysis.json trajectory
   ibench_pipeline      — §II-B semi-automatic benchmark pipeline on jnp ops
   hlo_roofline         — HLO parse + three-term roofline on a compiled step
   train_step_tiny      — end-to-end tiny train step wall time
@@ -371,6 +374,48 @@ def sim_steadystate() -> None:
     path.write_text(json.dumps(doc, indent=2) + "\n")
 
 
+def diagnostics() -> None:
+    """Findings-pass overhead on the 512-instr synthetic kernel.
+
+    ``derived`` reports the diagnose=True / diagnose=False wall-time ratio
+    plus the finding count — the regression guard for the plain path staying
+    free (the pass must cost ~nothing when not requested, and single-digit
+    percent when it is).  Appended to the ``BENCH_analysis.json`` trajectory.
+    """
+    import json
+    from pathlib import Path
+
+    from repro.core import analyze_kernel, thunderx2
+
+    model = thunderx2()
+    kernel = _synthetic_kernel(512)
+    plain_us = _timeit(lambda: analyze_kernel(kernel, model), repeats=5,
+                       warmup=2)
+    diag_us = _timeit(lambda: analyze_kernel(kernel, model, diagnose=True),
+                      repeats=5, warmup=2)
+    analysis = analyze_kernel(kernel, model, diagnose=True)
+    codes = sorted({f.code for f in analysis.findings})
+    overhead = diag_us / max(plain_us, 1e-9)
+    _row("diagnostics", diag_us,
+         f"plain_us={plain_us:.1f};overhead={overhead:.3f}x;"
+         f"findings={len(analysis.findings)};codes={'|'.join(codes)};n=512")
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_analysis.json"
+    doc = {"benchmark": "analysis", "entries": []}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            pass
+    doc["entries"].append({
+        "bench": "diagnostics", "n": 512,
+        "plain_us": round(plain_us, 1), "diagnose_us": round(diag_us, 1),
+        "overhead": round(overhead, 4),
+        "findings": len(analysis.findings), "codes": codes,
+    })
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def ibench_pipeline() -> None:
     import jax.numpy as jnp
     from repro.core.bench import populate_entry
@@ -461,7 +506,8 @@ def main(argv=None) -> None:
     table = {fn.__name__: fn for fn in (
         table1_gauss_seidel, table2_tx2_detail, analyzer_throughput,
         analyzer_scaling, scheduler_balance, analysis_service, resilience,
-        sim_steadystate, ibench_pipeline, hlo_roofline, train_step_tiny,
+        sim_steadystate, diagnostics, ibench_pipeline, hlo_roofline,
+        train_step_tiny,
         decode_step_tiny)}
     unknown = [n for n in names if n not in table]
     if unknown:

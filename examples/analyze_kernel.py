@@ -5,9 +5,12 @@ Usage:
 
 ``--arch`` accepts any id or alias from the architecture registry
 (``tx2``/``csx``/``zen``/``zen2``/``n1``, ``cascadelake``, ``graviton2``, …);
-``--format json`` emits the stable ``AnalysisReport`` schema instead of the
-Table-II text report.  ``--predictors tp,cp`` restricts the analysis to a
-subset of the four predictors (``tp``/``cp``/``lcd``/``sim``).
+``--format json`` (or the ``--json`` shorthand) emits the stable schema-v4
+``AnalysisReport`` payload instead of the Table-II text report.
+``--predictors tp,cp`` restricts the analysis to a subset of the four
+predictors (``tp``/``cp``/``lcd``/``sim``).  Bottleneck diagnostics
+(LCD chains, port hotspots, DB coverage gaps, window limits, unroll advice)
+are on by default; ``--no-diagnose`` turns them off.
 
 Markers: wrap the loop body in ``# OSACA-BEGIN`` / ``# OSACA-END`` comments,
 use IACA byte markers, or let the tool auto-detect the innermost loop.
@@ -67,10 +70,16 @@ def main() -> None:
     ap.add_argument("--unroll", type=int, default=4)
     ap.add_argument("--format", default="text",
                     choices=("text", "json", "markdown"))
+    ap.add_argument("--json", action="store_true",
+                    help="shorthand for --format json (full schema-v4 report)")
     ap.add_argument("--predictors", default="",
                     help="comma-separated subset of tp,cp,lcd,sim "
                          "(empty = all four)")
+    ap.add_argument("--no-diagnose", dest="diagnose", action="store_false",
+                    help="skip the bottleneck-diagnostics pass")
     args = ap.parse_args()
+    if args.json:
+        args.format = "json"
 
     try:
         spec = get_arch(args.arch)
@@ -91,7 +100,7 @@ def main() -> None:
 
     try:
         report = analyze(asm, arch=spec.id, unroll=args.unroll, name=name,
-                         predictors=predictors)
+                         predictors=predictors, diagnose=args.diagnose)
     except ValueError as exc:  # bad --predictors entry
         ap.error(str(exc))
     print(report.render(args.format))

@@ -118,7 +118,8 @@ def _coerce_kernel(source, spec: ArchSpec, name: Optional[str]) -> Kernel:
 
 def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
                 name: Optional[str] = None, timeout_s: Optional[float] = None,
-                degrade: bool = False, predictors=None) -> Analysis:
+                degrade: bool = False, predictors=None,
+                diagnose: bool = False) -> Analysis:
     """Like :func:`analyze` but returning the live assembly-pipeline
     :class:`Analysis` (kernel/model objects attached).  Asm targets only.
 
@@ -134,6 +135,9 @@ def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
     the default computes all four (see
     :func:`repro.core.analysis.normalize_predictors` for the implication
     rules).
+
+    ``diagnose=True`` attaches the structured bottleneck findings
+    (:mod:`repro.core.analysis.diagnostics`) to the analysis.
     """
     spec = get_arch(arch)
     if spec.is_hlo:
@@ -145,19 +149,21 @@ def analyze_raw(source, arch: str = "tx2", unroll: int = 1,
     kernel = _coerce_kernel(source, spec, name)
     if timeout_s is None and not degrade:
         return analyze_kernels([kernel], model_for(spec), unroll=unroll,
-                               predictors=predictors)[0]
+                               predictors=predictors, diagnose=diagnose)[0]
     from repro.core.analysis import analyze_kernel_ladder
     from repro.serving.resilience import Deadline
     checkpoint = (Deadline.after(timeout_s).check
                   if timeout_s is not None else None)
     return analyze_kernel_ladder(
         kernel, model_for(spec), unroll, checkpoint=checkpoint,
-        min_rung="parse_only" if degrade else "full", predictors=predictors)
+        min_rung="parse_only" if degrade else "full", predictors=predictors,
+        diagnose=diagnose)
 
 
 def analyze(source, arch: str = "tx2", unroll: int = 1,
             name: Optional[str] = None, timeout_s: Optional[float] = None,
-            degrade: bool = False, predictors=None) -> AnalysisReport:
+            degrade: bool = False, predictors=None,
+            diagnose: bool = False) -> AnalysisReport:
     """Analyze a kernel and return the serializable :class:`AnalysisReport`.
 
     ``source`` may be assembly text, a ``.s``/``.asm`` file path, a parsed
@@ -174,6 +180,10 @@ def analyze(source, arch: str = "tx2", unroll: int = 1,
     ``("tp", "cp", "lcd", "sim")``; the report carries ``None``/zero for
     predictors that were not requested.  HLO sources reject the parameter —
     the simulator and bracket selection are asm-pipeline concepts.
+
+    ``diagnose=True`` (asm targets only) runs the bottleneck-diagnostics
+    pass and fills the report's schema-v4 ``findings``; the default leaves
+    them ``None`` (pass not run).
     """
     spec = get_arch(arch)
     # Read path sources up front so the HLO sniff sees file *contents*, not
@@ -193,13 +203,17 @@ def analyze(source, arch: str = "tx2", unroll: int = 1,
             raise ValueError(
                 "predictors= applies to asm targets only; HLO analyses "
                 "always report the roofline/CP/LCD set")
+        if diagnose:
+            raise ValueError(
+                "diagnose= applies to asm targets only; the diagnostics "
+                "pass reads the asm pipeline's port/LCD/simulator results")
         chip = model_for(spec) if spec.is_hlo else None
         hlo_arch = spec.id if spec.is_hlo else "tpu-v5e"
         return AnalysisReport.from_hlo(source, chip=chip, arch=hlo_arch,
                                        name=name)
     return analyze_raw(source, arch=arch, unroll=unroll, name=name,
                        timeout_s=timeout_s, degrade=degrade,
-                       predictors=predictors).to_report()
+                       predictors=predictors, diagnose=diagnose).to_report()
 
 
 def __getattr__(attr):

@@ -29,6 +29,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 from repro.core.analysis.critical_path import (CriticalPathResult,
                                                critical_path_from_dag)
 from repro.core.analysis.dag import build_dag
+from repro.core.analysis.diagnostics import Finding
+from repro.core.analysis.diagnostics import diagnose as diagnose_analysis
 from repro.core.analysis.lcd import LCDResult, lcd_from_dag
 from repro.core.analysis.report import AnalysisReport
 from repro.core.analysis.throughput import (ThroughputResult,
@@ -96,6 +98,9 @@ class Analysis:
     # Window-limited OoO point prediction; ``None`` when not requested, when
     # the rung dropped it, or when the machine has no window parameters.
     sim: Optional[SimResult] = None
+    # Structured bottleneck diagnostics (``diagnose=True``); ``None`` means
+    # the pass did not run, ``()`` means it ran and found nothing.
+    findings: Optional[Tuple[Finding, ...]] = None
     degradation: str = "full"  # ladder rung that produced this analysis
     stages_completed: Tuple[str, ...] = ANALYSIS_STAGES
 
@@ -151,7 +156,7 @@ class Analysis:
 
 def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1,
                    checkpoint: Optional[Callable[[str], None]] = None,
-                   predictors=None) -> Analysis:
+                   predictors=None, diagnose: bool = False) -> Analysis:
     """Full TP/CP/LCD/sim analysis: one cost resolution, one DAG build.
 
     ``checkpoint(stage)`` — when given — is called at every stage boundary
@@ -165,6 +170,10 @@ def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1,
     (see :func:`normalize_predictors`); the default runs everything.  The
     simulator is skipped — without error — on machines with no
     ``window`` parameters; ``stages_completed`` records what actually ran.
+
+    ``diagnose=True`` runs the bottleneck-diagnostics pass
+    (:mod:`repro.core.analysis.diagnostics`) over the finished analysis and
+    attaches its findings.
     """
     preds = normalize_predictors(predictors)
     check = checkpoint or _no_checkpoint
@@ -198,9 +207,12 @@ def analyze_kernel(kernel: Kernel, model: MachineModel, unroll: int = 1,
                                 cancel=(lambda: check("sim"))
                                 if checkpoint is not None else None)
         stages.append("sim")
-    return Analysis(kernel=kernel, model=model, unroll=unroll,
-                    tp=tp, cp=cp, lcd=lcd, sim=sim,
-                    stages_completed=tuple(stages))
+    analysis = Analysis(kernel=kernel, model=model, unroll=unroll,
+                        tp=tp, cp=cp, lcd=lcd, sim=sim,
+                        stages_completed=tuple(stages))
+    if diagnose:
+        analysis.findings = diagnose_analysis(analysis)
+    return analysis
 
 
 def _no_checkpoint(stage: str) -> None:
@@ -213,7 +225,7 @@ def _no_checkpoint(stage: str) -> None:
 def analyze_kernel_bracket(kernel: Kernel, model: MachineModel,
                            unroll: int = 1,
                            checkpoint: Optional[Callable[[str], None]] = None,
-                           predictors=None) -> Analysis:
+                           predictors=None, diagnose: bool = False) -> Analysis:
     """Rung 2: the legacy [TP, CP] + LCD bracket without the simulator.
 
     Same single-sweep pipeline as ``full`` minus the ``sim`` stage — the
@@ -222,14 +234,14 @@ def analyze_kernel_bracket(kernel: Kernel, model: MachineModel,
     preds = normalize_predictors(predictors)
     bracket_preds = tuple(p for p in preds if p != "sim") or ("tp",)
     analysis = analyze_kernel(kernel, model, unroll, checkpoint=checkpoint,
-                              predictors=bracket_preds)
+                              predictors=bracket_preds, diagnose=diagnose)
     return replace(analysis, degradation="bracket")
 
 
 def analyze_kernel_tp_only(kernel: Kernel, model: MachineModel,
                            unroll: int = 1,
                            checkpoint: Optional[Callable[[str], None]] = None,
-                           ) -> Analysis:
+                           diagnose: bool = False) -> Analysis:
     """Rung 2: optimistic throughput only (the full-throughput model).
 
     No DAG, no CP/LCD sweeps, and no min-max scheduler — just cost
@@ -241,45 +253,57 @@ def analyze_kernel_tp_only(kernel: Kernel, model: MachineModel,
     costs = model.resolve_kernel(kernel)
     check("tp")
     tp = throughput_from_costs(costs, model, balanced=False)
-    return Analysis(kernel=kernel, model=model, unroll=unroll,
-                    tp=tp, cp=None, lcd=None,
-                    degradation="tp_only",
-                    stages_completed=_RUNG_STAGES["tp_only"])
+    analysis = Analysis(kernel=kernel, model=model, unroll=unroll,
+                        tp=tp, cp=None, lcd=None,
+                        degradation="tp_only",
+                        stages_completed=_RUNG_STAGES["tp_only"])
+    if diagnose:
+        analysis.findings = diagnose_analysis(analysis)
+    return analysis
 
 
 def analyze_kernel_parse_only(kernel: Kernel, model: MachineModel,
-                              unroll: int = 1) -> Analysis:
+                              unroll: int = 1,
+                              diagnose: bool = False) -> Analysis:
     """Rung 3: parse-level summary only — always answers.
 
     The kernel is already parsed when this runs (parsing failures are their
     own error class), so this rung never touches the machine DB and cannot
     time out: the floor of the degradation ladder.
     """
-    return Analysis(kernel=kernel, model=model, unroll=unroll,
-                    tp=None, cp=None, lcd=None,
-                    degradation="parse_only",
-                    stages_completed=_RUNG_STAGES["parse_only"])
+    analysis = Analysis(kernel=kernel, model=model, unroll=unroll,
+                        tp=None, cp=None, lcd=None,
+                        degradation="parse_only",
+                        stages_completed=_RUNG_STAGES["parse_only"])
+    if diagnose:
+        # Nothing resolved → every emitter guards to empty, but `()` still
+        # distinguishes "pass ran" from "pass not requested".
+        analysis.findings = diagnose_analysis(analysis)
+    return analysis
 
 
 def analyze_kernel_rung(kernel: Kernel, model: MachineModel, unroll: int = 1,
                         rung: str = "full",
                         checkpoint: Optional[Callable[[str], None]] = None,
-                        predictors=None) -> Analysis:
+                        predictors=None, diagnose: bool = False) -> Analysis:
     """Run exactly one ladder rung (``full`` / ``bracket`` / ``tp_only`` /
     ``parse_only``).  ``predictors`` filters the ``full`` and ``bracket``
     rungs; the cheaper rungs are already fixed subsets."""
     if rung == "full":
         return analyze_kernel(kernel, model, unroll, checkpoint=checkpoint,
-                              predictors=predictors)
+                              predictors=predictors, diagnose=diagnose)
     if rung == "bracket":
         return analyze_kernel_bracket(kernel, model, unroll,
                                       checkpoint=checkpoint,
-                                      predictors=predictors)
+                                      predictors=predictors,
+                                      diagnose=diagnose)
     if rung == "tp_only":
         return analyze_kernel_tp_only(kernel, model, unroll,
-                                      checkpoint=checkpoint)
+                                      checkpoint=checkpoint,
+                                      diagnose=diagnose)
     if rung == "parse_only":
-        return analyze_kernel_parse_only(kernel, model, unroll)
+        return analyze_kernel_parse_only(kernel, model, unroll,
+                                         diagnose=diagnose)
     raise ValueError(
         f"unknown degradation rung '{rung}'; known: {DEGRADATION_LADDER}")
 
@@ -287,7 +311,7 @@ def analyze_kernel_rung(kernel: Kernel, model: MachineModel, unroll: int = 1,
 def analyze_kernel_ladder(kernel: Kernel, model: MachineModel, unroll: int = 1,
                           checkpoint: Optional[Callable[[str], None]] = None,
                           min_rung: str = "parse_only",
-                          predictors=None) -> Analysis:
+                          predictors=None, diagnose: bool = False) -> Analysis:
     """Walk the degradation ladder: try each rung down to ``min_rung``.
 
     A rung that raises (deadline expiry at a stage boundary, injected fault,
@@ -305,7 +329,8 @@ def analyze_kernel_ladder(kernel: Kernel, model: MachineModel, unroll: int = 1,
         try:
             return analyze_kernel_rung(kernel, model, unroll, rung=rung,
                                        checkpoint=checkpoint,
-                                       predictors=predictors)
+                                       predictors=predictors,
+                                       diagnose=diagnose)
         except Exception as exc:  # noqa: BLE001 — fall one rung
             last_error = exc
     assert last_error is not None
@@ -385,9 +410,12 @@ def _form_text(form) -> str:
 
 
 def _cache_key(kernel: Kernel, model: MachineModel, unroll: int,
-               predictors: Tuple[str, ...] = PREDICTORS) -> tuple:
+               predictors: Tuple[str, ...] = PREDICTORS,
+               diagnose: bool = False) -> tuple:
+    # ``diagnose`` participates: a cached plain analysis must not satisfy a
+    # diagnose=True request (its findings would be None, not computed).
     text = "\n".join(_form_text(form) for form in kernel)
-    return (model.name, kernel.isa, unroll, predictors, text)
+    return (model.name, kernel.isa, unroll, predictors, bool(diagnose), text)
 
 
 def clear_analysis_cache() -> None:
@@ -400,12 +428,14 @@ def analyze_kernels(
     unroll: int = 1,
     use_cache: bool = True,
     predictors=None,
+    diagnose: bool = False,
 ) -> List[Analysis]:
     """Analyze a batch of kernels against one machine model.
 
     Repeated kernel texts (the common case on a serving path: many requests
     for the same hot loop) hit a process-level LRU keyed by
-    ``(model name, isa, unroll, predictors, kernel text)``; all misses share
+    ``(model name, isa, unroll, predictors, diagnose, kernel text)``; all
+    misses share
     the model's warm instruction-lookup memo, so a batch of *n* distinct
     kernels pays the instruction-DB probing cost once per distinct
     instruction form, not once per occurrence.
@@ -421,15 +451,15 @@ def analyze_kernels(
     for kernel in kernels:
         if not use_cache:
             out.append(analyze_kernel(kernel, model, unroll=unroll,
-                                      predictors=preds))
+                                      predictors=preds, diagnose=diagnose))
             continue
-        key = _cache_key(kernel, model, unroll, preds)
+        key = _cache_key(kernel, model, unroll, preds, diagnose)
         hit = _cache.get(key)
         if hit is not None:
             out.append(analysis_view(hit, kernel.name))
             continue
         analysis = analyze_kernel(kernel, model, unroll=unroll,
-                                  predictors=preds)
+                                  predictors=preds, diagnose=diagnose)
         _cache.put(key, analysis)
         out.append(analysis)
     return out

@@ -95,6 +95,16 @@ def _text_asm(report) -> str:
         lines.append(f"DEGRADED answer: rung={report.degradation}  "
                      f"stages completed: {stages} — numbers above cover "
                      f"only those stages (the rest read 0)")
+    if report.findings is not None:
+        lines.append("")
+        if report.findings:
+            lines.append(f"Diagnostics ({len(report.findings)} finding(s)):")
+            for f in report.findings:
+                anchor = (f"  [lines {','.join(map(str, f.lines))}]"
+                          if f.lines else "")
+                lines.append(f"  [{f.severity}] {f.code}: {f.message}{anchor}")
+        else:
+            lines.append("Diagnostics: no findings")
     return "\n".join(lines)
 
 
@@ -184,6 +194,17 @@ def render_markdown(report) -> str:
         stages = ", ".join(report.stages_completed) or "parse only"
         lines.append(f"- **DEGRADED** — rung `{report.degradation}`; "
                      f"stages completed: {stages}")
+    if report.findings is not None:
+        lines.append("")
+        lines.append(f"#### Diagnostics ({len(report.findings)} finding(s))")
+        if report.findings:
+            for f in report.findings:
+                anchor = (f" _(lines {', '.join(map(str, f.lines))})_"
+                          if f.lines else "")
+                lines.append(f"- **{f.severity}** `{f.code}` — "
+                             f"{f.message}{anchor}")
+        else:
+            lines.append("- no findings")
     return "\n".join(lines)
 
 

@@ -20,6 +20,8 @@ import json
 from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional, Tuple
 
+from repro.core.analysis.diagnostics import Finding
+
 #: v2 adds the balanced (min-max optimal port assignment) throughput bound:
 #: ``tp_balanced_block``, ``balanced_port_load``, ``balanced_bottleneck``.
 #: v1 payloads load with ``balanced == optimistic`` (v1 predates the
@@ -36,7 +38,13 @@ from typing import Dict, Optional, Tuple
 #: ``sim_converged`` / ``sim_copies`` / ``sim_clamped`` / ``sim_limiter``,
 #: and ``sim_window`` (the per-arch window parameters used).  v1/v2
 #: payloads load with ``sim_block=None``.
-SCHEMA_VERSION = 3
+#:
+#: v4 adds ``findings`` — the structured bottleneck diagnostics
+#: (:mod:`repro.core.analysis.diagnostics`).  ``None`` means the diagnostics
+#: pass did not run (absence ≠ zero findings: an empty list is a clean bill
+#: of health, ``None`` says nobody looked); v1/v2/v3 payloads load with
+#: ``findings=None``.
+SCHEMA_VERSION = 4
 
 #: All pipeline stages, the ``stages_completed`` value of a full report.
 FULL_STAGES = ("resolve", "tp", "dag", "cp", "lcd", "sim")
@@ -111,6 +119,9 @@ class AnalysisReport:
     sim_clamped: str = ""  # "" | "tp" | "cp"
     sim_limiter: str = ""  # dominant binding constraint at steady state
     sim_window: Dict[str, int] = field(default_factory=dict)
+    # Structured bottleneck diagnostics (schema v4).  ``None`` = the
+    # diagnostics pass did not run; ``()`` = it ran and found nothing.
+    findings: Optional[Tuple[Finding, ...]] = None
     schema_version: int = SCHEMA_VERSION
 
     # -- derived -----------------------------------------------------------
@@ -177,6 +188,8 @@ class AnalysisReport:
             "sim_clamped": self.sim_clamped,
             "sim_limiter": self.sim_limiter,
             "sim_window": dict(self.sim_window),
+            "findings": ([f.to_dict() for f in self.findings]
+                         if self.findings is not None else None),
             "prediction_bracket": self.prediction_bracket(),
             "rows": [asdict(r) for r in self.rows],
             "lcd_chains": [
@@ -236,6 +249,11 @@ class AnalysisReport:
             sim_clamped=data.get("sim_clamped", ""),
             sim_limiter=data.get("sim_limiter", ""),
             sim_window=dict(data.get("sim_window", {})),
+            # v4 diagnostics: for older payloads, None states faithfully
+            # that the pass never ran (absence ≠ zero findings).
+            findings=(tuple(Finding.from_dict(f)
+                            for f in data["findings"])
+                      if data.get("findings") is not None else None),
             schema_version=version,
         )
 
@@ -329,6 +347,7 @@ class AnalysisReport:
             sim_limiter=sim.limiter if sim is not None else "",
             sim_window=(sim.window.to_dict()
                         if sim is not None and sim.window is not None else {}),
+            findings=getattr(analysis, "findings", None),
         )
 
     @classmethod

@@ -115,6 +115,10 @@ class InstructionCost:
     load: Optional[DBEntry] = None  # split-off load part, if any
     store: Optional[DBEntry] = None  # split-off store part, if any
     fused_away: bool = False  # macro-fused compare: contributes no pressure
+    # True when no DB entry matched and the machine default was used: every
+    # number derived from this cost is a guess, which the diagnostics pass
+    # surfaces as a DB_COVERAGE_GAP finding.
+    defaulted: bool = False
 
     @property
     def total_pressure(self) -> Dict[str, float]:
@@ -150,9 +154,14 @@ class MachineModel:
     window: Optional[WindowParams] = None
     # Memoized lookup results keyed by (mnemonic, signature, has_loads,
     # has_stores): repeated instruction forms (every copy of every unrolled
-    # instance) resolve to the same (entry, load, store) parts, so probing
-    # the DB once per distinct form is enough.
+    # instance) resolve to the same (entry, load, store, defaulted) parts,
+    # so probing the DB once per distinct form is enough.
     _lookup_cache: Dict[tuple, tuple] = field(
+        default_factory=dict, repr=False, compare=False)
+    # Running count of default-entry fallbacks per ``mnemonic:signature``
+    # form, bumped on *every* lookup (memo hits included) so callers can
+    # diff the counter around a resolve and attribute gaps per analysis.
+    fallbacks: Dict[str, int] = field(
         default_factory=dict, repr=False, compare=False)
 
     # -- lookup ------------------------------------------------------------
@@ -176,14 +185,20 @@ class MachineModel:
             if len(self._lookup_cache) >= 1 << 16:
                 self._lookup_cache.clear()
             self._lookup_cache[cache_key] = parts
-        entry, load, store = parts
-        return InstructionCost(form=form, entry=entry, load=load, store=store)
+        entry, load, store, defaulted = parts
+        if defaulted:
+            form_key = f"{form.mnemonic}:{sig}"
+            if len(self.fallbacks) >= 1 << 16:
+                self.fallbacks.clear()
+            self.fallbacks[form_key] = self.fallbacks.get(form_key, 0) + 1
+        return InstructionCost(form=form, entry=entry, load=load, store=store,
+                               defaulted=defaulted)
 
     def _lookup_parts(self, form: InstructionForm, sig: str):
-        """Uncached DB probe; returns ``(entry, load, store)``."""
+        """Uncached DB probe; returns ``(entry, load, store, defaulted)``."""
         key = f"{form.mnemonic}:{sig}"
         if key in self.db:
-            return self.db[key], None, None
+            return self.db[key], None, None, False
 
         if "m" in sig:
             # Try register-form entry + split load/store µ-ops.
@@ -192,15 +207,16 @@ class MachineModel:
                 if reg_key in self.db:
                     return (self.db[reg_key],
                             self.load_entry if form.loads else None,
-                            self.store_entry if form.stores else None)
+                            self.store_entry if form.stores else None,
+                            False)
 
         if form.mnemonic in self.db:
-            return self.db[form.mnemonic], None, None
+            return self.db[form.mnemonic], None, None, False
 
         # Mnemonic-family fallback (e.g. ``b.ne`` -> ``b``).
         family = form.mnemonic.split(".")[0]
         if family in self.db:
-            return self.db[family], None, None
+            return self.db[family], None, None, False
 
         if (self.name, key) not in _WARNED_DEFAULTS:
             if len(_WARNED_DEFAULTS) >= 1 << 16:
@@ -211,7 +227,7 @@ class MachineModel:
                 f"(latency={self.default_entry.latency})",
                 stacklevel=3,
             )
-        return self.default_entry, None, None
+        return self.default_entry, None, None, True
 
     def resolve_kernel(self, kernel) -> Tuple[InstructionCost, ...]:
         """Resolve all instructions, applying macro fusion peepholes."""
@@ -220,7 +236,9 @@ class MachineModel:
             for i in range(len(costs) - 1):
                 a, b = costs[i], costs[i + 1]
                 if a.form.mnemonic.startswith(("cmp", "test")) and b.form.is_branch:
-                    costs[i] = InstructionCost(form=a.form, entry=a.entry, fused_away=True)
+                    costs[i] = InstructionCost(form=a.form, entry=a.entry,
+                                               fused_away=True,
+                                               defaulted=a.defaulted)
                     costs[i + 1] = InstructionCost(
                         form=b.form,
                         entry=DBEntry(
@@ -228,5 +246,6 @@ class MachineModel:
                             pressure=dict(self.fused_branch_pressure),
                             note="macro-fused cmp+jcc",
                         ),
+                        defaulted=b.defaulted,
                     )
         return tuple(costs)

@@ -97,6 +97,17 @@ def asm_arch_ids() -> List[str]:
     return sorted(s.id for s in _REGISTRY.values() if not s.is_hlo)
 
 
+def registry_snapshot() -> Tuple[Dict[str, str], Dict[str, ArchSpec]]:
+    """Copies of the (alias → id, id → spec) tables, for consistency checks.
+
+    The machine-model linter (:mod:`repro.core.machine.lint`) walks these to
+    find dangling aliases and resolution cycles without reaching into the
+    module privates; mutating the returned dicts does not affect the
+    registry.
+    """
+    return dict(_NAMES), dict(_REGISTRY)
+
+
 # ---------------------------------------------------------------------------
 # Built-in targets (paper machines + the TPU HLO adaptation)
 # ---------------------------------------------------------------------------

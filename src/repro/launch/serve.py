@@ -37,12 +37,14 @@ def _analysis_pool(args):
     from repro.serving.analysis import AnalysisRequest
 
     preds = _predictors(args)
+    diag = bool(getattr(args, "diagnose", False))
     if args.kernel_file:
         with open(args.kernel_file) as f:
             asm = f.read()
         arch = get_arch(args.arch or "tx2").id
         return [AnalysisRequest(asm=asm, arch=arch, unroll=args.unroll,
-                                name=args.kernel_file, predictors=preds)]
+                                name=args.kernel_file, predictors=preds,
+                                diagnose=diag)]
     if args.arch:
         spec = get_arch(args.arch)
         if spec.sample_asm is None:
@@ -51,7 +53,7 @@ def _analysis_pool(args):
         return [
             AnalysisRequest(asm=spec.sample_asm, arch=spec.id, unroll=u,
                             name=f"{spec.id}-gauss-seidel/{u}x",
-                            predictors=preds)
+                            predictors=preds, diagnose=diag)
             for u in (1, args.unroll)
         ]
     # Default synthetic traffic: a stream of requests drawn from a few hot
@@ -59,11 +61,11 @@ def _analysis_pool(args):
     tx2, csx = get_arch("tx2"), get_arch("csx")
     return [
         AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=args.unroll,
-                        name="gs-tx2", predictors=preds),
+                        name="gs-tx2", predictors=preds, diagnose=diag),
         AnalysisRequest(asm=csx.sample_asm, arch="csx", unroll=args.unroll,
-                        name="gs-csx", predictors=preds),
+                        name="gs-csx", predictors=preds, diagnose=diag),
         AnalysisRequest(asm=tx2.sample_asm, arch="tx2", unroll=1,
-                        name="gs-tx2-1x", predictors=preds),
+                        name="gs-tx2-1x", predictors=preds, diagnose=diag),
     ]
 
 
@@ -145,6 +147,9 @@ def main() -> None:
     ap.add_argument("--predictors", default="",
                     help="comma-separated predictor subset "
                          "(tp,cp,lcd,sim; empty = all)")
+    ap.add_argument("--diagnose", action="store_true",
+                    help="attach structured bottleneck findings "
+                         "(schema-v4 report 'findings') to each analysis")
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="deterministic injected fault rate per stage site")
     ap.add_argument("--fault-seed", type=int, default=0)

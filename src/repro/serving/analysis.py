@@ -81,7 +81,9 @@ class AnalysisRequest:
     overrides the service's per-request deadline (0 = use the service
     default; ignored when the service has no resilience config).
     ``predictors`` (additive, v2) selects a subset of
-    ``("tp", "cp", "lcd", "sim")``; empty means all.
+    ``("tp", "cp", "lcd", "sim")``; empty means all.  ``diagnose``
+    (additive, v2) attaches the structured bottleneck findings to the
+    report (schema v4 ``findings``).
     """
 
     asm: str
@@ -91,6 +93,7 @@ class AnalysisRequest:
     name: str = "kernel"
     timeout_s: float = 0.0
     predictors: Tuple[str, ...] = ()
+    diagnose: bool = False
     version: int = API_VERSION
 
     def normalized_predictors(self) -> Tuple[str, ...]:
@@ -101,25 +104,29 @@ class AnalysisRequest:
     def key(self) -> tuple:
         """Canonical cache identity: registry-resolved arch id + isa, so
         aliases (``cascadelake`` vs ``csx``) share one entry, plus the
-        normalized predictor subset.  Falls back to the raw fields when the
-        arch (or predictor set) is unknown (the request then errors at
-        analysis time anyway).  ``timeout_s`` is deliberately excluded: it
-        shapes how long we try, not what the answer is."""
+        normalized predictor subset and the ``diagnose`` flag (a plain
+        report must not satisfy a diagnose request).  Falls back to the raw
+        fields when the arch (or predictor set) is unknown (the request then
+        errors at analysis time anyway).  ``timeout_s`` is deliberately
+        excluded: it shapes how long we try, not what the answer is."""
         try:
             preds = self.normalized_predictors()
         except ValueError:
             preds = tuple(self.predictors)
+        diag = bool(self.diagnose)
         try:
             spec = get_arch(self.arch)
         except ValueError:
-            return (self.arch, self.isa, self.asm, self.unroll, preds)
-        return (spec.id, self.isa or spec.isa, self.asm, self.unroll, preds)
+            return (self.arch, self.isa, self.asm, self.unroll, preds, diag)
+        return (spec.id, self.isa or spec.isa, self.asm, self.unroll, preds,
+                diag)
 
     def to_dict(self) -> Dict:
         return {"version": self.version, "asm": self.asm, "arch": self.arch,
                 "isa": self.isa, "unroll": self.unroll, "name": self.name,
                 "timeout_s": self.timeout_s,
-                "predictors": list(self.predictors)}
+                "predictors": list(self.predictors),
+                "diagnose": self.diagnose}
 
     @classmethod
     def from_dict(cls, data: Dict) -> "AnalysisRequest":
@@ -128,6 +135,7 @@ class AnalysisRequest:
                    name=data.get("name", "kernel"),
                    timeout_s=data.get("timeout_s", 0.0),
                    predictors=tuple(data.get("predictors", ())),
+                   diagnose=data.get("diagnose", False),
                    version=data.get("version", API_VERSION))
 
 
@@ -366,14 +374,15 @@ class AnalysisService:
         preds = req.normalized_predictors()  # ValueError on unknown names
         # Same shape as AnalysisRequest.key, built from the spec already in
         # hand (the property would resolve the registry a second time).
-        return spec, parser, (spec.id, isa, req.asm, req.unroll, preds)
+        return spec, parser, (spec.id, isa, req.asm, req.unroll, preds,
+                              bool(req.diagnose))
 
     def _analyze_batch(
         self, requests: Sequence[AnalysisRequest]
     ) -> List[Union[Analysis, Exception]]:
         out: List[Optional[Union[Analysis, Exception]]] = [None] * len(requests)
         # One job per distinct uncached kernel in the wave.
-        jobs: List[Tuple[List[int], object, tuple, str, int, tuple]] = []
+        jobs: List[Tuple] = []
         pending: Dict[tuple, List[int]] = {}
         for pos, req in enumerate(requests):
             try:
@@ -402,14 +411,17 @@ class AnalysisService:
                 self._cache.put(key, out[pos])
                 continue
             pending[key] = [pos]
+            # key[-2]/key[-1] are the normalized predictors and the diagnose
+            # flag (see _resolve's key shape).
             jobs.append((pending[key], kernel, key, spec.id, req.unroll,
-                         key[-1]))
+                         key[-2], key[-1]))
 
-        for positions, kernel, key, arch_id, unroll, preds in jobs:
+        for positions, kernel, key, arch_id, unroll, preds, diag in jobs:
             model = self.model_for(arch_id)  # memoized per service
             try:
                 analysis = analyze_kernels([kernel], model, unroll=unroll,
-                                           predictors=preds)[0]
+                                           predictors=preds,
+                                           diagnose=diag)[0]
             except Exception as exc:
                 exc = exc.with_traceback(None)
                 for pos in positions:
@@ -430,7 +442,7 @@ class AnalysisService:
         points, and per-job deadlines/retries/degradation."""
         cfg = self.resilience or ResilienceConfig()
         out: List[Optional[_Outcome]] = [None] * len(requests)
-        jobs: List[Tuple[List[int], object, tuple, str, int, float, tuple]] = []
+        jobs: List[Tuple] = []
         pending: Dict[tuple, List[int]] = {}
         for pos, req in enumerate(requests):
             try:
@@ -475,12 +487,13 @@ class AnalysisService:
             pending[key] = [pos]
             timeout_s = req.timeout_s or cfg.request_timeout_s
             jobs.append((pending[key], kernel, key, spec.id, req.unroll,
-                         timeout_s, key[-1]))
+                         timeout_s, key[-2], key[-1]))
 
-        for positions, kernel, key, arch_id, unroll, timeout_s, preds in jobs:
+        for (positions, kernel, key, arch_id, unroll, timeout_s, preds,
+             diag) in jobs:
             model = self.model_for(arch_id)
             outcome = self._run_job(kernel, model, unroll, timeout_s, cfg,
-                                    preds)
+                                    preds, diag)
             breaker = self.breaker_for(arch_id)
             analysis = outcome.analysis
             if analysis is not None and not analysis.degraded:
@@ -517,7 +530,8 @@ class AnalysisService:
 
     def _run_job(self, kernel, model, unroll: int, timeout_s: float,
                  cfg: ResilienceConfig,
-                 predictors: Optional[tuple] = None) -> _Outcome:
+                 predictors: Optional[tuple] = None,
+                 diagnose: bool = False) -> _Outcome:
         """One kernel through deadline + retry + degradation ladder."""
         deadline = (Deadline.after(timeout_s, cfg.clock)
                     if timeout_s > 0 else None)
@@ -537,7 +551,7 @@ class AnalysisService:
                 try:
                     analysis = self._run_rung(kernel, model, unroll, rung,
                                               checkpoint, deadline, cfg,
-                                              predictors)
+                                              predictors, diagnose)
                     return _Outcome(analysis=analysis, attempts=attempts)
                 except Exception as exc:  # noqa: BLE001 — classified below
                     last_exc = exc
@@ -554,11 +568,13 @@ class AnalysisService:
 
     def _run_rung(self, kernel, model, unroll: int, rung: str, checkpoint,
                   deadline: Optional[Deadline], cfg: ResilienceConfig,
-                  predictors: Optional[tuple] = None):
+                  predictors: Optional[tuple] = None,
+                  diagnose: bool = False):
         def run():
             return analyze_kernel_rung(kernel, model, unroll, rung=rung,
                                        checkpoint=checkpoint,
-                                       predictors=predictors)
+                                       predictors=predictors,
+                                       diagnose=diagnose)
 
         # The cancellable worker bounds wall time even when a stage blocks
         # between checkpoints; with a virtual clock (chaos tests) wall time

@@ -278,7 +278,7 @@ def test_request_key_canonical_across_aliases():
     assert a.key == b.key
     unknown = AnalysisRequest(asm="x", arch="not-a-machine")
     assert unknown.key == ("not-a-machine", "", "x", 1,
-                           ("tp", "cp", "lcd", "sim"))
+                           ("tp", "cp", "lcd", "sim"), False)
     # predictors are part of the identity: a sim-less request must not
     # collide with (or be served from) a full analysis.
     subset = AnalysisRequest(asm="fadd d0, d0, d1", arch="csx",

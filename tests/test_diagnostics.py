@@ -1,0 +1,292 @@
+"""Bottleneck-diagnostics tests: the ``diagnose`` pass, the schema-v4
+``findings`` field (absence vs empty), renderer sections, cache-key
+participation, and the serving envelope pass-through."""
+
+import json
+
+import pytest
+
+from repro.api import analyze
+from repro.core.analysis import AnalysisReport, Finding, diagnose
+from repro.core.analysis.analyze import (_cache_key, analyze_kernel,
+                                         analyze_kernel_rung)
+from repro.core.analysis.diagnostics import _sim_findings
+from repro.core.isa import parse_aarch64
+from repro.core.machine import thunderx2
+from repro.core.machine.window import WindowParams
+from repro.core.sim.engine import SimResult
+from repro.core.validation import GS_TX2_ASM
+from repro.serving.analysis import AnalysisRequest, AnalysisService
+
+
+def _by_code(findings, code):
+    return [f for f in findings if f.code == code]
+
+
+@pytest.fixture(scope="module")
+def gs_report():
+    return analyze(GS_TX2_ASM, arch="tx2", unroll=4, name="gs",
+                   diagnose=True)
+
+
+# -- the acceptance kernel: Gauss-Seidel on ThunderX2 -------------------------
+
+
+def test_lcd_bottleneck_names_the_fadd_fmul_chain(gs_report):
+    (finding,) = _by_code(gs_report.findings, "LCD_BOTTLENECK")
+    assert finding.severity == "warning"
+    edges = finding.payload["edges"]
+    # The recurrence is the fadd/fadd/fmul pattern, every member at 6 cy.
+    assert {e["mnemonic"] for e in edges} == {"fadd", "fmul"}
+    assert all(e["latency"] == pytest.approx(6.0) for e in edges)
+    # Per-edge contributions are consistent with the LCD sweep: they sum to
+    # the reported chain period (Table I: 18 cy/it at 4x unroll).
+    assert sum(e["latency"] for e in edges) == pytest.approx(
+        finding.payload["chain_cycles"])
+    assert finding.payload["chain_cycles"] == pytest.approx(
+        gs_report.lcd_block)
+    assert finding.payload["per_iteration"] == pytest.approx(18.0)
+    assert finding.payload["residual_cycles"] == 0.0
+    assert finding.payload["dominates_throughput"] is True
+    # Anchors mirror the edges (clickable source lines).
+    assert finding.lines == tuple(e["line"] for e in edges)
+    assert finding.instrs == tuple(e["index"] for e in edges)
+
+
+def test_port_hotspot_and_unroll_advice(gs_report):
+    (hotspot,) = _by_code(gs_report.findings, "PORT_HOTSPOT")
+    # The FP pipes saturate, but the LCD chain is longer — info, not warning.
+    assert set(hotspot.payload["hot_ports"]) == {"P0", "P1"}
+    assert hotspot.payload["bound"] == pytest.approx(
+        gs_report.tp_balanced_block)
+    assert hotspot.severity == "info"
+    assert hotspot.payload["dominates"] is False
+    for cls in hotspot.payload["saturating_classes"]:
+        assert set(cls["ports"]) <= {"P0", "P1"}
+
+    (advice,) = _by_code(gs_report.findings, "UNROLL_ADVICE")
+    assert advice.severity == "advice"
+    assert advice.payload["ratio"] == pytest.approx(
+        gs_report.cp_per_it / (gs_report.tp_balanced_block / 4))
+    assert 2 <= advice.payload["suggested_unroll"] <= 8
+    # The LCD floor is carried so nobody unrolls expecting TP-level speed.
+    assert advice.payload["lcd_per_it"] == pytest.approx(18.0)
+
+
+def test_findings_sorted_most_severe_first(gs_report):
+    ranks = {"warning": 0, "advice": 1, "info": 2}
+    sevs = [ranks[f.severity] for f in gs_report.findings]
+    assert sevs == sorted(sevs)
+
+
+def test_diagnose_deterministic(gs_report):
+    again = analyze(GS_TX2_ASM, arch="tx2", unroll=4, name="gs",
+                    diagnose=True)
+    assert again.findings == gs_report.findings
+
+
+# -- DB_COVERAGE_GAP + the recorded fallback state (was warn-once only) -------
+
+
+def test_db_coverage_gap_promotes_default_fallbacks():
+    kernel = parse_aarch64("frobnicate d0, d0, d1\nfadd d1, d1, d2",
+                           name="gap")
+    model = thunderx2()
+    analysis = analyze_kernel(kernel, model, 1, diagnose=True)
+    gaps = _by_code(analysis.findings, "DB_COVERAGE_GAP")
+    assert len(gaps) == 1
+    (gap,) = gaps
+    assert gap.severity == "warning"
+    assert gap.payload["form"].startswith("frobnicate:")
+    assert gap.payload["arch"] == "tx2"
+    assert gap.payload["count"] == 1
+    # Satellite: the fallback is recorded per-model state, not only a
+    # process-wide warn-once message.
+    assert any(k.startswith("frobnicate:") for k in model.fallbacks)
+    # Known forms never show up as gaps.
+    assert not any("fadd" in g.payload["form"] for g in gaps)
+
+
+def test_clean_kernel_has_no_coverage_gap(gs_report):
+    assert not _by_code(gs_report.findings, "DB_COVERAGE_GAP")
+
+
+# -- SIM_WINDOW_LIMITED / SIM_CLAMPED (emitter-level: GS is ports-limited) ----
+
+
+class _SimStub:
+    def __init__(self, sim):
+        self.sim = sim
+
+
+def _sim(**kw):
+    base = dict(cy_per_block=40.0, raw_cy_per_block=40.0, copies=4,
+                converged=True, clamped_to="", limiter="ports",
+                window=WindowParams(issue_width=4, rob_size=180,
+                                    sched_size=60, lsq_size=40,
+                                    retire_width=4),
+                port_busy={})
+    base.update(kw)
+    return SimResult(**base)
+
+
+def test_sim_window_limited_names_resource_and_capacity():
+    findings = _sim_findings(_SimStub(_sim(limiter="rob")))
+    (f,) = _by_code(findings, "SIM_WINDOW_LIMITED")
+    assert f.severity == "info"
+    assert f.payload["capacity_field"] == "rob_size"
+    assert f.payload["capacity"] == 180
+    assert "re-order buffer" in f.message
+    # ports/dependencies are not window resources — no finding.
+    assert not _sim_findings(_SimStub(_sim(limiter="ports")))
+
+
+def test_sim_clamped_reports_bracket_edge():
+    sim = _sim(clamped_to="cp", raw_cy_per_block=55.0, cy_per_block=50.0)
+    (f,) = _by_code(_sim_findings(_SimStub(sim)), "SIM_CLAMPED")
+    assert f.payload["edge"] == "cp"
+    assert f.payload["raw_block"] == pytest.approx(55.0)
+    assert "CP upper bound" in f.message
+
+
+def test_gs_sim_within_bracket_has_no_sim_findings(gs_report):
+    assert not _by_code(gs_report.findings, "SIM_CLAMPED")
+    assert not _by_code(gs_report.findings, "SIM_WINDOW_LIMITED")
+
+
+# -- schema v4: round-trip, absence vs empty, legacy loads --------------------
+
+
+def test_v4_roundtrip_with_findings_bit_identical(gs_report):
+    data = gs_report.to_dict()
+    assert data["schema_version"] == 4
+    assert data["findings"] and isinstance(data["findings"], list)
+    wire = json.loads(json.dumps(data))
+    restored = AnalysisReport.from_dict(wire)
+    assert restored.to_dict() == data
+    assert restored.findings == gs_report.findings
+
+
+def test_findings_absent_vs_empty():
+    # diagnose=False → the pass never ran → None (serialized null) …
+    plain = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    assert plain.findings is None
+    assert plain.to_dict()["findings"] is None
+    # … while a rung that ran the pass but had nothing to say returns ().
+    kernel = parse_aarch64(GS_TX2_ASM, name="gs")
+    parsed = analyze_kernel_rung(kernel, thunderx2(), 4, rung="parse_only",
+                                 diagnose=True)
+    assert parsed.findings == ()
+    report = AnalysisReport.from_analysis(parsed)
+    assert report.to_dict()["findings"] == []
+    back = AnalysisReport.from_dict(report.to_dict())
+    assert back.findings == ()
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+def test_legacy_payloads_load_with_findings_none(version):
+    data = analyze(GS_TX2_ASM, arch="tx2", unroll=4, diagnose=True).to_dict()
+    legacy = {k: v for k, v in data.items() if k != "findings"}
+    if version < 3:
+        legacy = {k: v for k, v in legacy.items()
+                  if not k.startswith("sim_")}
+        legacy.pop("stages_completed", None)
+    if version < 2:
+        for k in ("tp_balanced_block", "balanced_port_load",
+                  "balanced_bottleneck"):
+            legacy.pop(k, None)
+    legacy["schema_version"] = version
+    report = AnalysisReport.from_dict(legacy)
+    assert report.findings is None  # pre-v4: the pass did not exist
+
+
+def test_future_schema_still_rejected(gs_report):
+    data = gs_report.to_dict()
+    data["schema_version"] = 5
+    with pytest.raises(ValueError, match="newer than supported"):
+        AnalysisReport.from_dict(data)
+
+
+def test_finding_from_dict_tolerates_missing_optionals():
+    f = Finding.from_dict({"code": "X", "severity": "info", "message": "m"})
+    assert f.lines == () and f.instrs == () and f.payload == {}
+
+
+# -- renderers ----------------------------------------------------------------
+
+
+def test_text_renderer_has_diagnostics_section(gs_report):
+    text = gs_report.render("text")
+    assert "Diagnostics (" in text
+    assert "LCD_BOTTLENECK" in text and "[warning]" in text
+    # Without the pass, the section is omitted entirely (absence ≠ zero).
+    plain = analyze(GS_TX2_ASM, arch="tx2", unroll=4)
+    assert "Diagnostics" not in plain.render("text")
+
+
+def test_markdown_renderer_has_diagnostics_section(gs_report):
+    md = gs_report.render("markdown")
+    assert "#### Diagnostics" in md and "`LCD_BOTTLENECK`" in md
+
+
+# -- cache key + serving envelope ---------------------------------------------
+
+
+def test_cache_key_separates_diagnose():
+    kernel = parse_aarch64(GS_TX2_ASM, name="gs")
+    model = thunderx2()
+    plain = _cache_key(kernel, model, 4, ("tp",))
+    diag = _cache_key(kernel, model, 4, ("tp",), diagnose=True)
+    assert plain != diag
+    assert plain[:4] == diag[:4]
+
+
+def test_request_key_and_dict_carry_diagnose():
+    a = AnalysisRequest(asm="fadd d0, d0, d1", arch="tx2")
+    b = AnalysisRequest(asm="fadd d0, d0, d1", arch="tx2", diagnose=True)
+    assert a.key != b.key
+    assert b.key[-1] is True
+    # Wire round-trip, and v1 payloads (no diagnose field) default to False.
+    assert AnalysisRequest.from_dict(b.to_dict()).diagnose is True
+    legacy = {k: v for k, v in a.to_dict().items() if k != "diagnose"}
+    assert AnalysisRequest.from_dict(legacy).diagnose is False
+
+
+def test_service_passes_findings_through_envelope():
+    service = AnalysisService()
+    req = AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4,
+                          name="gs-diag", diagnose=True)
+    (resp,) = service.submit_batch([req])
+    assert resp.ok
+    assert resp.report.findings
+    codes = {f.code for f in resp.report.findings}
+    assert "LCD_BOTTLENECK" in codes
+    wire = json.loads(json.dumps(resp.to_dict()))
+    assert wire["report"]["findings"]
+    # The plain request must not be served from the diagnose cache line.
+    (plain,) = service.submit_batch([
+        AnalysisRequest(asm=GS_TX2_ASM, arch="tx2", unroll=4, name="gs-diag")])
+    assert plain.report.findings is None
+
+
+def test_api_diagnose_rejected_for_hlo():
+    with pytest.raises(ValueError, match="asm targets only"):
+        analyze("HloModule m\nENTRY e { ROOT c = f32[] constant(0) }",
+                arch="tpu-v5e", diagnose=True)
+
+
+def test_diagnose_on_degraded_rungs():
+    kernel = parse_aarch64(GS_TX2_ASM, name="gs")
+    model = thunderx2()
+    tp_only = analyze_kernel_rung(kernel, model, 4, rung="tp_only",
+                                  diagnose=True)
+    assert tp_only.findings is not None
+    # No LCD/CP stages → no chain or unroll findings, but port data exists.
+    codes = {f.code for f in tp_only.findings}
+    assert "LCD_BOTTLENECK" not in codes and "UNROLL_ADVICE" not in codes
+    assert "PORT_HOTSPOT" in codes
+    # diagnose() is also callable standalone on a finished analysis.
+    full = analyze_kernel(kernel, model, 4)
+    assert full.findings is None
+    assert diagnose(full) == analyze_kernel(kernel, model, 4,
+                                            diagnose=True).findings

@@ -1,0 +1,194 @@
+"""Machine-DB / registry linter tests: the shipped tables pass ``--strict``,
+and each check fires on a purposely corrupted table (the CI-gate guarantee:
+a typo'd port or latency fails the build, it does not silently skew bounds)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.machine import (cascade_lake, neoverse_n1, thunderx2, zen,
+                                zen2)
+from repro.core.machine.lint import (LintIssue, lint_all, lint_model,
+                                     lint_registry, main)
+from repro.core.machine.model import DBEntry, MachineModel, uops_entry
+from repro.core.machine.window import WindowParams
+from repro.core.registry import registry_snapshot
+
+FACTORIES = (thunderx2, cascade_lake, zen, zen2, neoverse_n1)
+
+
+def _codes(issues):
+    return {i.code for i in issues}
+
+
+def _with_entry(model: MachineModel, key: str, entry: DBEntry) -> MachineModel:
+    db = dict(model.db)
+    db[key] = entry
+    return dataclasses.replace(model, db=db)
+
+
+# -- the shipped tables are clean ---------------------------------------------
+
+
+@pytest.mark.parametrize("factory", FACTORIES, ids=lambda f: f.__name__)
+def test_shipped_model_lints_clean_strict(factory):
+    assert lint_model(factory()) == []
+
+
+def test_shipped_registry_lints_clean():
+    assert lint_registry() == []
+
+
+def test_lint_all_clean_and_cli_exit_codes(capsys):
+    assert lint_all() == []
+    assert main(["--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s), 0 warning(s)" in out
+    # A subset run names only the requested archs.
+    assert main(["tx2", "--strict"]) == 0
+    assert "1 machine DB(s)" in capsys.readouterr().out
+
+
+# -- per-entry checks fire on corrupted DBs -----------------------------------
+
+
+def test_negative_latency_and_undeclared_port_fail():
+    bad = _with_entry(thunderx2(), "badinst",
+                      DBEntry(latency=-3.0, pressure={"P9": 0.5}))
+    issues = lint_model(bad)
+    assert {"NEGATIVE_LATENCY", "UNDECLARED_PORT"} <= _codes(issues)
+    assert all(i.severity == "error" for i in issues)
+    assert any(i.subject == "badinst" for i in issues)
+
+
+def test_nan_latency_is_an_error():
+    bad = _with_entry(thunderx2(), "naninst",
+                      DBEntry(latency=float("nan"), pressure={}))
+    assert "NEGATIVE_LATENCY" in _codes(lint_model(bad))
+
+
+def test_implausible_latency_is_warning_only():
+    slow = _with_entry(thunderx2(), "slowinst",
+                       DBEntry(latency=4000.0, pressure={"P0": 1.0}))
+    issues = lint_model(slow)
+    assert _codes(issues) == {"IMPLAUSIBLE_LATENCY"}
+    assert all(i.severity == "warning" for i in issues)
+
+
+def test_negative_pressure_and_empty_uop_ports_fail():
+    bad = _with_entry(
+        thunderx2(), "badp",
+        DBEntry(latency=1.0, pressure={"P0": -0.5},
+                uops=((1.0, ()),)))
+    assert {"NEGATIVE_PRESSURE", "EMPTY_UOP_PORTS"} <= _codes(lint_model(bad))
+
+
+def test_uop_pressure_mismatch_fails():
+    # Stored uniform split says P0-only, but the µ-op is P0/P1-eligible.
+    lying = DBEntry(latency=1.0, pressure={"P0": 1.0},
+                    uops=((1.0, ("P0", "P1")),))
+    issues = lint_model(_with_entry(thunderx2(), "liar", lying))
+    assert "UOP_PRESSURE_MISMATCH" in _codes(issues)
+    # The honest derivation (0.5/0.5) passes.
+    honest = uops_entry(1.0, [(1.0, ("P0", "P1"))])
+    assert lint_model(_with_entry(thunderx2(), "liar", honest)) == []
+
+
+def test_throughput_inconsistent_fails():
+    # One 2-cy µ-op pinned to P0 cannot beat 2 cy inverse throughput.
+    entry = dataclasses.replace(uops_entry(4.0, [(2.0, ("P0",))]),
+                                throughput=0.5)
+    issues = lint_model(_with_entry(thunderx2(), "tooGood", entry))
+    assert "THROUGHPUT_INCONSISTENT" in _codes(issues)
+    ok = dataclasses.replace(entry, throughput=2.0)
+    assert lint_model(_with_entry(thunderx2(), "tooGood", ok)) == []
+
+
+# -- model-level checks -------------------------------------------------------
+
+
+def test_duplicate_port_and_missing_entry_fail():
+    model = thunderx2()
+    dup = dataclasses.replace(model, ports=model.ports + ("P0",))
+    assert "DUPLICATE_PORT" in _codes(lint_model(dup))
+    gutted = dataclasses.replace(model, load_entry=None)
+    assert "MISSING_ENTRY" in _codes(lint_model(gutted))
+
+
+def test_window_bounds_violation_fails():
+    # Constructor does not validate; the linter must catch the bypass.
+    bad_window = WindowParams(issue_width=8, rob_size=4, sched_size=60,
+                              lsq_size=36, retire_width=4)
+    model = dataclasses.replace(thunderx2(), window=bad_window)
+    issues = lint_model(model)
+    assert "WINDOW_BOUNDS" in _codes(issues)
+    no_window = dataclasses.replace(thunderx2(), window=None)
+    warnings_ = [i for i in lint_model(no_window) if i.code == "NO_WINDOW"]
+    assert warnings_ and warnings_[0].severity == "warning"
+
+
+def test_fusion_without_pressure_warns():
+    model = dataclasses.replace(cascade_lake(), fused_branch_pressure={})
+    issues = [i for i in lint_model(model) if i.code == "FUSION_NO_PRESSURE"]
+    assert issues and issues[0].severity == "warning"
+
+
+def test_bad_frequency_fails():
+    model = dataclasses.replace(thunderx2(), frequency_ghz=0.0)
+    assert "BAD_FREQUENCY" in _codes(lint_model(model))
+
+
+# -- registry checks (injected tables) ----------------------------------------
+
+
+def test_alias_cycle_and_dangling_alias_fire():
+    issues = lint_registry(names={"a": "B", "b": "A"}, registry={})
+    assert _codes(issues) == {"ALIAS_CYCLE"}
+    issues = lint_registry(names={"a": "ghost"}, registry={})
+    assert _codes(issues) == {"DANGLING_ALIAS"}
+
+
+def test_self_resolution_fires():
+    names, registry = registry_snapshot()
+    names["tx2"] = "csx"  # copies: the live registry is untouched
+    issues = lint_registry(names=names, registry=registry)
+    assert any(i.code == "SELF_RESOLUTION" and i.subject == "tx2"
+               for i in issues)
+    assert lint_registry() == []  # live tables unharmed
+
+
+def test_no_parser_fires():
+    names, registry = registry_snapshot()
+    spec = dataclasses.replace(registry["tx2"], parser=None)
+    registry["tx2"] = spec
+    issues = lint_registry(names=names, registry=registry)
+    assert any(i.code == "NO_PARSER" and i.subject == "tx2" for i in issues)
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def test_cli_fails_on_corrupted_db(monkeypatch, capsys):
+    import repro.core.machine.lint as lint_mod
+
+    def corrupt_all(arch_ids=None):
+        return [LintIssue("error", "tx2", "NEGATIVE_LATENCY", "badinst",
+                          "latency -3.0 is not a non-negative number")]
+
+    monkeypatch.setattr(lint_mod, "lint_all", corrupt_all)
+    assert main([]) == 1
+    out = capsys.readouterr().out
+    assert "NEGATIVE_LATENCY" in out and "1 error(s)" in out
+
+
+def test_cli_strict_fails_on_warning(monkeypatch, capsys):
+    import repro.core.machine.lint as lint_mod
+
+    def warn_all(arch_ids=None):
+        return [LintIssue("warning", "tx2", "IMPLAUSIBLE_LATENCY", "slow",
+                          "latency 4000 cy exceeds the plausibility cap")]
+
+    monkeypatch.setattr(lint_mod, "lint_all", warn_all)
+    assert main([]) == 0  # warnings alone pass the default gate
+    assert main(["--strict"]) == 1
+    assert "1 warning(s)" in capsys.readouterr().out

@@ -182,7 +182,7 @@ def test_report_carries_balanced_bound_and_v1_compat():
 
     report = analyze(GS_TX2_ASM, arch="tx2", unroll=4, name="gs")
     data = report.to_dict()
-    assert data["schema_version"] == 3
+    assert data["schema_version"] == 4
     assert data["tp_balanced_block"] == pytest.approx(8.5)
     assert data["balanced_bottleneck"] in ("P0", "P1")
     restored = AnalysisReport.from_dict(data)

@@ -251,7 +251,7 @@ def test_report_v3_roundtrip_carries_sim_fields():
 
     report = analyze(GS_TX2_ASM, arch="tx2", unroll=4, name="gs")
     data = report.to_dict()
-    assert data["schema_version"] == 3
+    assert data["schema_version"] == 4
     assert data["sim_block"] == pytest.approx(72.0)
     assert data["sim_converged"] is True
     assert data["sim_clamped"] == ""
@@ -280,7 +280,7 @@ def test_report_rejects_future_schema():
     from repro.api import analyze
 
     data = analyze(GS_TX2_ASM, arch="tx2").to_dict()
-    data["schema_version"] = 4
+    data["schema_version"] = 5
     with pytest.raises(ValueError, match="newer than supported"):
         AnalysisReport.from_dict(data)
 
